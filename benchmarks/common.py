@@ -1,0 +1,41 @@
+"""Shared benchmark helpers: scenario tables, CSV/JSON emission."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+REPORT_DIR = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                          "reports", "bench")
+
+
+def emit(name: str, rows: list[dict], keys: list[str] | None = None) -> None:
+    """Print a compact CSV block and persist JSON under reports/bench/."""
+    os.makedirs(REPORT_DIR, exist_ok=True)
+    with open(os.path.join(REPORT_DIR, f"{name}.json"), "w") as f:
+        json.dump(rows, f, indent=1, default=float)
+    if not rows:
+        print(f"# {name}: (no rows)")
+        return
+    keys = keys or list(rows[0].keys())
+    print(f"# {name}")
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(_fmt(r.get(k)) for k in keys))
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0

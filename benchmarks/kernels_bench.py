@@ -1,0 +1,59 @@
+"""Kernel micro-benchmarks: Pallas-interpret vs pure-jnp reference.
+
+Wall-times on this CPU container measure the *interpreter*, not the TPU —
+they validate dataflow cost ordering; the TPU performance story lives in
+the dry-run roofline (§Roofline).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core.encoding import LTCode
+from repro.kernels import coded_matvec, lt_encode, ssd_forward
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def run(quick: bool = False) -> None:
+    rng = np.random.default_rng(0)
+    rows = []
+
+    r, m, b = (1024, 2048, 8) if not quick else (256, 512, 4)
+    a = jnp.asarray(rng.standard_normal((r, m)).astype(np.float32))
+    x = jnp.asarray(rng.standard_normal((m, b)).astype(np.float32))
+    for mode in ["interpret", "off"]:
+        rows.append({"kernel": "coded_matvec", "mode": mode,
+                     "shape": f"{r}x{m}x{b}",
+                     "us_per_call": _time(lambda aa, xx: coded_matvec(aa, xx, mode=mode), a, x)})
+
+    plan = LTCode(r=r // 4, seed=1).plan(r // 2)
+    a2 = jnp.asarray(rng.standard_normal((r // 4, m // 2)).astype(np.float32))
+    idx, cf = jnp.asarray(plan.indices), jnp.asarray(plan.coeffs)
+    for mode in ["interpret", "off"]:
+        rows.append({"kernel": "lt_encode", "mode": mode,
+                     "shape": f"{plan.q}x{m // 2}",
+                     "us_per_call": _time(lambda aa: lt_encode(aa, idx, cf, mode=mode), a2)})
+
+    B, S, H, P, G, N = (2, 512, 8, 64, 1, 64) if not quick else (1, 128, 4, 16, 1, 16)
+    xs = jnp.asarray(rng.standard_normal((B, S, H, P)).astype(np.float32) * 0.1)
+    da = jnp.asarray(-np.abs(rng.standard_normal((B, S, H))).astype(np.float32) * 0.3)
+    bb = jnp.asarray(rng.standard_normal((B, S, G, N)).astype(np.float32) * 0.3)
+    cc = jnp.asarray(rng.standard_normal((B, S, G, N)).astype(np.float32) * 0.3)
+    for mode in ["interpret", "off"]:
+        rows.append({"kernel": "ssd_forward", "mode": mode,
+                     "shape": f"{B}x{S}x{H}x{P}",
+                     "us_per_call": _time(
+                         lambda *t: ssd_forward(*t, chunk=128 if not quick else 32,
+                                                mode=mode), xs, da, bb, cc)})
+    emit("kernels", rows)

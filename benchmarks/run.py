@@ -1,0 +1,39 @@
+"""Benchmark driver: one block per paper table/figure + kernels + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only sim,ec2,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="reduced trial counts")
+    ap.add_argument("--only", default=None,
+                    help="comma list: sim,ec2,kernels,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import kernels_bench, paper_ec2, paper_sim, roofline_bench
+
+    blocks = [
+        ("sim", paper_sim.run),        # Figs 1-6 (§4 simulation studies)
+        ("ec2", paper_ec2.run),        # Figs 8-11 (§5 EC2 experiments, emulated)
+        ("kernels", kernels_bench.run),
+        ("roofline", roofline_bench.run),
+    ]
+    t0 = time.time()
+    for name, fn in blocks:
+        if only and name not in only:
+            continue
+        t = time.time()
+        fn(quick=args.quick)
+        print(f"# [{name}] done in {time.time() - t:.1f}s", file=sys.stderr)
+    print(f"# all benchmarks done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

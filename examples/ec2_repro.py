@@ -1,0 +1,68 @@
+"""Reproduce the paper's EC2 Experiment 1 + 2 (Figs 8, 10) on the emulator.
+
+    PYTHONPATH=src python examples/ec2_repro.py [--scale 40] [--trials 8]
+
+Instance mixes and (mu, alpha) come from the paper's Table 1; matrix sizes
+are scaled down so the grid runs in minutes.  Expected qualitative results
+(the paper's claims):
+  * with 20% unexpected stragglers BPCC beats Uniform/Load-Balanced/HCMM
+    in every scenario;
+  * sweeping straggler probability 0 -> 0.6, uncoded schemes win only at 0;
+    HCMM degrades below uncoded at high straggler rates; BPCC stays best.
+"""
+import argparse
+
+import numpy as np
+
+from repro.cluster import ClusterEmulator, StragglerPolicy, ec2_scenario
+from repro.utils.prng import rng as _rng
+
+SCHEMES = ["uniform", "load_balanced", "hcmm", "bpcc"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=40, help="divide paper r by this")
+    ap.add_argument("--trials", type=int, default=8)
+    ap.add_argument("--m", type=int, default=10_000)
+    args = ap.parse_args()
+
+    print("=== Experiment 1 (Fig 8): 20% stragglers, scenarios 1-4 ===")
+    for s in [1, 2, 3, 4]:
+        r, workers = ec2_scenario(s)
+        r //= args.scale
+        g = _rng(s)
+        a = g.standard_normal((r, args.m)).astype(np.float32)
+        x = g.standard_normal(args.m).astype(np.float32)
+        line = [f"scenario {s} (r={r}, N={len(workers)}):"]
+        means = {}
+        for scheme in SCHEMES:
+            em = ClusterEmulator(workers, time_scale=1.0,
+                                 straggler=StragglerPolicy(prob=0.2), seed=s)
+            ts = [em.run_task(a, x, scheme, code="lt").t_complete
+                  for _ in range(args.trials)]
+            means[scheme] = np.mean(ts)
+            line.append(f"{scheme}={means[scheme]:.3f}s")
+        best = min(means, key=means.get)
+        line.append(f"[best: {best}]")
+        print("  " + "  ".join(line))
+
+    print("\n=== Experiment 2 (Fig 10): straggler sweep, scenario 4 ===")
+    r, workers = ec2_scenario(4)
+    r //= args.scale
+    g = _rng(99)
+    a = g.standard_normal((r, args.m)).astype(np.float32)
+    x = g.standard_normal(args.m).astype(np.float32)
+    for prob in [0.0, 0.2, 0.4, 0.6]:
+        line = [f"p_straggle={prob:.1f}:"]
+        for scheme in SCHEMES:
+            em = ClusterEmulator(workers, time_scale=1.0,
+                                 straggler=StragglerPolicy(prob=prob), seed=5)
+            ts = [em.run_task(a, x, scheme, code="lt").t_complete
+                  for _ in range(args.trials)]
+            line.append(f"{scheme}={np.mean(ts):.3f}s")
+        print("  " + "  ".join(line))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Straggler-tolerant serving: BPCC coded LM head under live shard loss.
+
+    PYTHONPATH=src python examples/serve_coded.py
+
+Runs the continuous-batching engine twice on identical requests:
+  A) healthy cluster (all 16 TP shards),
+  B) a health-monitor-driven mask that drops up to 2 shards per step.
+The BPCC block code makes the generated tokens IDENTICAL — the paper's
+"don't wait for stragglers" guarantee, realized on the serving hot path.
+"""
+import numpy as np
+import jax
+
+from repro.configs import get_config
+from repro.core.distributions import ShiftedExp
+from repro.models.registry import build_model
+from repro.runtime.health import HealthMonitor
+from repro.serve import Request, ServeEngine
+
+
+def main() -> None:
+    cfg = get_config("phi3-mini-3.8b", smoke=True).scaled(coded=True, coded_parity=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+
+    # a health monitor fed by synthetic per-shard latency observations:
+    # shards 5 and 11 degrade badly mid-run
+    hm = HealthMonitor(n_workers=16, window=32)
+    healthy = ShiftedExp(mu=1e4, alpha=1e-4)
+    degraded = ShiftedExp(mu=1e2, alpha=3e-3)
+    for i in range(32):
+        for w in range(16):
+            mdl = degraded if w in (5, 11) else healthy
+            hm.record(w, 100.0, mdl.batch_arrival_times(np.array([100.0]), seed=i * 31 + w)[0])
+    print("health mask (0 = flagged straggler):",
+          hm.straggler_mask(slowdown=2.0).astype(int).tolist())
+
+    def run(mask_fn):
+        eng = ServeEngine(model, params, n_slots=4, s_max=64, mask_fn=mask_fn)
+        rng = np.random.default_rng(7)
+        for i in range(8):
+            eng.submit(Request(uid=i, prompt=rng.integers(0, cfg.vocab, 8).astype(np.int32),
+                               max_new_tokens=12))
+        return {r.uid: r.out_tokens for r in eng.run()}
+
+    out_healthy = run(None)
+    out_masked = run(lambda: hm.straggler_mask(slowdown=2.0))
+    same = out_healthy == out_masked
+    print(f"8 requests x 12 tokens; tokens identical with 2 shards dropped: {same}")
+    print("sample:", out_masked[0])
+    assert same
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+Uses the real production stack — pjit'd train step with microbatch
+accumulation and remat, AdamW with int8 moments, atomic checkpoints with a
+mid-run restart, coded gradient aggregation with an injected straggler —
+on a ~110M-param GLM4-family config sized for this CPU container.
+"""
+import argparse
+import tempfile
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data import make_pipeline
+from repro.models.registry import build_model
+from repro.optim import AdamWConfig, warmup_cosine
+from repro.runtime import restore_checkpoint, save_checkpoint
+from repro.train.loop import TrainConfig, init_train_state, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    args = ap.parse_args()
+
+    # ~110M params: glm4 family, scaled depth/width, full arch features
+    cfg = get_config("glm4-9b").scaled(
+        n_layers=6, d_model=512, n_heads=8, n_kv_heads=2, head_dim=64,
+        d_ff=1536, vocab=8192, remat=True,
+    )
+    model = build_model(cfg)
+    n_params = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(model.param_shapes()))
+    print(f"[train_lm] {cfg.name}-mini: {n_params / 1e6:.1f}M params")
+
+    opt = AdamWConfig(lr=warmup_cosine(6e-4, 30, args.steps), moment_dtype="int8")
+    tc = TrainConfig(microbatches=2, gradient_coding="cyclic", gc_stragglers=1)
+    step_fn = jax.jit(make_train_step(model, opt, tc))
+    state = init_train_state(model, jax.random.key(0), opt)
+    pipe = make_pipeline(cfg, seq=args.seq, global_batch=args.batch, seed=0)
+
+    ckpt_dir = tempfile.mkdtemp(prefix="train_lm_")
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    losses = []
+    step = 0
+    while step < args.steps:
+        batch = jax.tree.map(jnp.asarray, pipe.batch(step))
+        # coded-DP straggler: one of 2 gradient messages lost 10% of steps
+        mask = jnp.asarray([1.0, 1.0] if rng.random() > 0.1 else [1.0, 0.0])
+        state, m = step_fn(state, batch, mask)
+        losses.append(float(m["loss"]))
+        step += 1
+        if step % 25 == 0:
+            tok_s = step * args.batch * args.seq / (time.time() - t0)
+            print(f"  step {step:4d} loss={losses[-1]:.4f} tok/s={tok_s:,.0f}")
+        if step == args.steps // 2:
+            # checkpoint + simulated preemption + restart
+            save_checkpoint(ckpt_dir, step, state)
+            print(f"  -- checkpoint at {step}; simulating restart --")
+            del state
+            _, state = restore_checkpoint(
+                ckpt_dir, jax.eval_shape(lambda k: init_train_state(model, k, opt),
+                                         jax.random.key(0)))
+    print(f"[train_lm] loss {losses[0]:.3f} -> {np.mean(losses[-20:]):.3f} "
+          f"in {time.time() - t0:.0f}s ({args.steps} steps)")
+    assert np.mean(losses[-20:]) < losses[0] - 0.5, "loss should drop substantially"
+
+
+if __name__ == "__main__":
+    main()

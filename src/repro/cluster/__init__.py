@@ -1,0 +1,16 @@
+"""Heterogeneous-cluster emulator — the paper's EC2/MPI experiments, locally.
+
+A thread-based master/worker executor that performs the *real* computation
+(numpy/JAX matvec on real data, real LT encode + peeling decode) while the
+*observed* completion behaviour follows injected per-worker shifted
+exponential latency (paper Eq. 3 / Table 1) plus optional unexpected
+stragglers (paper §5.3.1: 3x observed delay with probability 0.2).
+"""
+from repro.cluster.profiles import (  # noqa: F401
+    EC2_PROFILES,
+    WorkerProfile,
+    ec2_scenario,
+    paper_sim_scenario,
+)
+from repro.cluster.straggler import StragglerPolicy  # noqa: F401
+from repro.cluster.executor import ClusterEmulator, TaskResult  # noqa: F401

@@ -1,0 +1,280 @@
+"""Thread-based master/worker cluster emulator.
+
+Faithful to the paper's EC2/MPI implementation (§5.1) with the hardware
+swapped for injected latency:
+
+  * the master encodes A once (LT with peeling decode, eps = 0.13, exactly
+    as the paper; or dense Gaussian with LS decode), pre-distributes the
+    coded row blocks to workers, then broadcasts ``x``,
+  * each worker thread computes its batches **for real** (numpy matmul per
+    batch) and *returns* batch k at the model-scheduled observed time
+    ``k * b_i * rate_i`` (rate drawn once per task from the shifted
+    exponential, times the unexpected-straggler multiplier),
+  * the master consumes results from a queue; as soon as the accumulated
+    rows reach the recovery threshold it signals workers to stop (paper:
+    "worker nodes will stop execution once the master node receives
+    sufficient amount of results") and decodes,
+  * completion time = arrival of the last needed batch; decode time is
+    measured separately (paper Fig. 8 stacks the two).
+
+``time_scale`` compresses emulated seconds into wall seconds so the full
+paper experiment grid runs in CI; all *reported* times are in model seconds.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.cluster.profiles import WorkerProfile
+from repro.cluster.straggler import StragglerPolicy
+from repro.core.allocation import Allocation, allocate
+from repro.core.decoding import peel_decode_np
+from repro.core.encoding import (
+    EncodePlan,
+    GaussianCode,
+    LTCode,
+    encode_matrix,
+    required_rows,
+)
+from repro.utils.prng import derive
+
+__all__ = ["ClusterEmulator", "TaskResult"]
+
+
+@dataclass
+class TaskResult:
+    """Outcome of one distributed matvec."""
+
+    y: np.ndarray               # recovered result [r] (or [r, nrhs])
+    t_complete: float           # model-time of the last needed batch arrival
+    t_decode: float             # wall-clock decode seconds (real work)
+    rows_received: int          # coded rows consumed by the decoder
+    ok: bool                    # decode success
+    scheme: str
+    arrivals: list[tuple[float, int, int]] = field(default_factory=list)
+    # (model_time, worker, rows) per received batch — E[S(t)] curves (Fig 9)
+
+    def rows_by_time(self, t_grid: np.ndarray) -> np.ndarray:
+        """S(t) on a grid, from the recorded arrival events."""
+        ts = np.array([a[0] for a in self.arrivals])
+        rows = np.array([a[2] for a in self.arrivals])
+        order = np.argsort(ts)
+        ts, rows = ts[order], np.cumsum(rows[order])
+        idx = np.searchsorted(ts, t_grid, side="right") - 1
+        out = np.where(idx >= 0, rows[np.clip(idx, 0, None)], 0)
+        return out.astype(np.float64)
+
+
+class _Worker(threading.Thread):
+    """One emulated worker: real batch matvecs, model-scheduled returns."""
+
+    def __init__(
+        self,
+        wid: int,
+        rows: np.ndarray,          # this worker's coded rows [l_i, m]
+        row_offset: int,
+        x: np.ndarray,
+        p: int,
+        rate: float,               # observed seconds-per-row this task
+        out: queue.Queue,
+        stop: threading.Event,
+        t0: float,
+        time_scale: float,
+    ):
+        super().__init__(daemon=True)
+        self.wid, self.rows, self.row_offset = wid, rows, row_offset
+        self.x, self.p, self.rate = x, max(1, min(p, len(rows) or 1)), rate
+        self.out, self.stop, self.t0, self.time_scale = out, stop, t0, time_scale
+
+    def run(self) -> None:
+        l = len(self.rows)
+        if l == 0:
+            return
+        b = -(-l // self.p)  # ceil — paper: every batch b_i rows, last may be short
+        for k in range(1, self.p + 1):
+            if self.stop.is_set():
+                return
+            lo, hi = (k - 1) * b, min(k * b, l)
+            if lo >= hi:
+                return
+            vals = self.rows[lo:hi] @ self.x          # the real compute
+            t_model = min(k * b, l) * self.rate        # Eq. (3) arrival of batch k
+            t_wall = self.t0 + t_model * self.time_scale
+            delay = t_wall - time.monotonic()
+            if delay > 0:
+                if self.stop.wait(timeout=delay):     # interruptible sleep
+                    return
+            self.out.put((t_model, self.wid, lo + self.row_offset, vals))
+
+
+class ClusterEmulator:
+    """Master + N emulated heterogeneous workers."""
+
+    def __init__(
+        self,
+        profiles: list[WorkerProfile],
+        *,
+        time_scale: float = 1.0,
+        straggler: StragglerPolicy | None = None,
+        seed: int = 0,
+    ):
+        self.profiles = profiles
+        self.time_scale = time_scale
+        self.straggler = straggler or StragglerPolicy(prob=0.0)
+        self.seed = seed
+        self._task_counter = 0
+
+    # -- one distributed task --------------------------------------------
+    def run_task(
+        self,
+        a: np.ndarray,
+        x: np.ndarray,
+        scheme: str = "bpcc",
+        *,
+        p: int | np.ndarray | None = None,
+        code: str = "lt",
+        overhead: float = 0.13,
+        alloc: Allocation | None = None,
+    ) -> TaskResult:
+        """Distributed y = A x under ``scheme`` ('uniform' | 'load_balanced' |
+        'hcmm' | 'bpcc')."""
+        r, m = a.shape
+        if x.shape[0] != m:
+            raise ValueError(f"x has {x.shape[0]} entries, A has {m} columns")
+        task_id = self._task_counter
+        self._task_counter += 1
+
+        # accept WorkerProfile or bare ShiftedExp
+        models = [getattr(w, "model", w) for w in self.profiles]
+        if alloc is None:
+            kw = {"p": p} if scheme == "bpcc" else {}
+            alloc = allocate(scheme, r, models, **kw)
+
+        # ---- encode & distribute (pre-stored in the paper; excluded from T)
+        if alloc.coded:
+            plan = (
+                LTCode(r, seed=derive(self.seed, "code", task_id)).plan(alloc.total_rows)
+                if code == "lt"
+                else GaussianCode(r, seed=derive(self.seed, "code", task_id)).plan(
+                    alloc.total_rows
+                )
+            )
+            # interleave coded rows across workers: a contiguous split would
+            # pool the systematic prefix on the first workers, skewing the
+            # received-set distribution the peeling decoder sees
+            import numpy as _np
+
+            perm = _np.random.Generator(
+                _np.random.PCG64(derive(self.seed, "perm", task_id))
+            ).permutation(plan.q)
+            plan = EncodePlan(
+                indices=plan.indices[perm], coeffs=plan.coeffs[perm],
+                r=plan.r, q=plan.q, kind=plan.kind,
+            )
+            a_hat = encode_matrix(a, plan)
+            need = required_rows(r, plan.kind if code == "lt" else "gaussian", overhead)
+        else:
+            plan = None
+            a_hat = a
+            need = r
+
+        offsets = np.concatenate([[0], np.cumsum(alloc.loads)])
+        # ---- realized rates: shifted-exp draw x unexpected-straggler multiplier
+        rates = np.array(
+            [
+                mdl.sample_task_rate(derive(self.seed, "rate", task_id, i), 1)[0]
+                for i, mdl in enumerate(models)
+            ]
+        )
+        rates *= self.straggler.draw(len(models), derive(self.seed, "strag", task_id))
+
+        out_q: queue.Queue = queue.Queue()
+        stop = threading.Event()
+        t0 = time.monotonic()
+        threads = []
+        for i in range(len(models)):
+            lo, hi = int(offsets[i]), int(offsets[i + 1])
+            pw = int(alloc.batches[i])
+            threads.append(
+                _Worker(
+                    i, a_hat[lo:hi], lo, x, pw, float(rates[i]),
+                    out_q, stop, t0, self.time_scale,
+                )
+            )
+        for t in threads:
+            t.start()
+
+        # ---- master: consume until enough rows, decode, RETRY with more
+        # rows if the erasure pattern defeats the decoder (real systems keep
+        # draining the network rather than declaring failure at r(1+eps))
+        nrhs = 1 if x.ndim == 1 else x.shape[1]
+        got_rows = np.zeros(alloc.total_rows, dtype=bool)
+        buf = np.zeros((alloc.total_rows, nrhs), dtype=np.float64)
+        arrivals: list[tuple[float, int, int]] = []
+        rows_seen, t_complete = 0, np.inf
+        deadline = t0 + 600.0  # hard wall-clock guard
+        target = need
+        t_decode = 0.0
+        y, ok = np.zeros((r, nrhs)), False
+
+        def _decode():
+            td0 = time.perf_counter()
+            if not alloc.coded:
+                res = buf[:r], bool(got_rows[:r].all())
+            else:
+                sel = np.flatnonzero(got_rows)
+                if plan.kind == "gaussian":
+                    # float64 normal equations (f32 squares the condition
+                    # number and visibly corrupts large r)
+                    g = plan.dense_generator()[sel].astype(np.float64)
+                    gtg = g.T @ g + 1e-10 * np.eye(r, dtype=np.float64)
+                    res = (
+                        np.linalg.solve(gtg, g.T @ buf[sel].astype(np.float64)),
+                        len(sel) >= r,
+                    )
+                else:
+                    yy, okk, _ = peel_decode_np(
+                        buf[sel], plan.indices[sel], plan.coeffs[sel], r
+                    )
+                    res = yy, okk
+            return res, time.perf_counter() - td0
+
+        while time.monotonic() < deadline:
+            drained = False
+            while rows_seen < target:
+                try:
+                    t_model, wid, lo, vals = out_q.get(timeout=1.0)
+                except queue.Empty:
+                    if not any(t.is_alive() for t in threads) and out_q.empty():
+                        drained = True
+                        break
+                    continue
+                vals2 = vals.reshape(len(vals), nrhs)
+                buf[lo : lo + len(vals2)] = vals2
+                got_rows[lo : lo + len(vals2)] = True
+                rows_seen += len(vals2)
+                arrivals.append((t_model, wid, len(vals2)))
+                t_complete = t_model
+            (y, ok), dt_dec = _decode()
+            t_decode += dt_dec
+            if ok or drained or rows_seen >= alloc.total_rows:
+                break
+            target = min(alloc.total_rows, max(target + max(r // 50, 1), rows_seen + 1))
+        stop.set()
+        for t in threads:
+            t.join(timeout=5.0)
+
+        y = y if x.ndim > 1 else y[:, 0]
+        return TaskResult(
+            y=y,
+            t_complete=float(t_complete),
+            t_decode=float(t_decode),
+            rows_received=int(rows_seen),
+            ok=bool(ok),
+            scheme=scheme,
+            arrivals=arrivals,
+        )

@@ -1,0 +1,32 @@
+"""Unexpected-straggler injection (paper §5.3.1).
+
+"the probability of a worker node to be a straggler is set to 0.2, and the
+straggler is emulated by delaying the return of computing results such that
+the computing time observed by the master node is three times of the actual
+computing time."
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.utils.prng import rng as _rng
+
+__all__ = ["StragglerPolicy"]
+
+
+@dataclass(frozen=True)
+class StragglerPolicy:
+    """Bernoulli(prob) straggler draw per (worker, task); observed time x slowdown."""
+
+    prob: float = 0.0
+    slowdown: float = 3.0
+
+    def draw(self, n_workers: int, seed: int) -> np.ndarray:
+        """Multiplier per worker for this task: slowdown where hit, else 1."""
+        if self.prob <= 0.0:
+            return np.ones(n_workers)
+        g = _rng(seed)
+        hit = g.uniform(size=n_workers) < self.prob
+        return np.where(hit, self.slowdown, 1.0)

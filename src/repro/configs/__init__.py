@@ -1,0 +1,45 @@
+"""Architecture registry: the 10 assigned archs + the paper's own scenarios.
+
+    from repro.configs import ARCHS, SMOKES, get_config, SHAPES
+    cfg = get_config("glm4-9b")
+"""
+from __future__ import annotations
+
+from repro.configs import (
+    dbrx_132b,
+    glm4_9b,
+    llama32_vision_11b,
+    llama4_maverick_400b_a17b,
+    mamba2_130m,
+    nemotron4_15b,
+    nemotron4_340b,
+    phi3_mini_3_8b,
+    seamless_m4t_large_v2,
+    zamba2_1_2b,
+)
+from repro.configs.shapes import SHAPES, Workload, applicable, cells  # noqa: F401
+from repro.models.config import ModelConfig
+
+_MODULES = [
+    llama4_maverick_400b_a17b,
+    dbrx_132b,
+    mamba2_130m,
+    glm4_9b,
+    nemotron4_15b,
+    nemotron4_340b,
+    phi3_mini_3_8b,
+    zamba2_1_2b,
+    llama32_vision_11b,
+    seamless_m4t_large_v2,
+]
+
+ARCHS: dict[str, ModelConfig] = {m.CONFIG.name: m.CONFIG for m in _MODULES}
+SMOKES: dict[str, ModelConfig] = {m.CONFIG.name: m.SMOKE for m in _MODULES}
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    table = SMOKES if smoke else ARCHS
+    try:
+        return table[name]
+    except KeyError:
+        raise ValueError(f"unknown arch {name!r}; options: {sorted(ARCHS)}") from None

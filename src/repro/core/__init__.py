@@ -1,0 +1,70 @@
+"""Core BPCC library: the paper's contribution as composable JAX modules.
+
+Public API re-exports the pieces a framework user needs:
+
+    from repro.core import (
+        ShiftedExp, bpcc_allocation, hcmm_allocation, allocate,
+        LTCode, GaussianCode, encode_matrix,
+        peel_decode_np, ls_decode, masked_pinv_decode,
+        simulate_scheme, accumulation_curve,
+        CodedLinear, coded_block_matmul, bpcc_batched_matvec,
+        frc_code, cyclic_code, decode_weights,
+    )
+"""
+from repro.core.distributions import (  # noqa: F401
+    ShiftedExp,
+    estimate_parameters,
+    sample_heterogeneous_cluster,
+)
+from repro.core.allocation import (  # noqa: F401
+    Allocation,
+    allocate,
+    bpcc_allocation,
+    hcmm_allocation,
+    load_balanced_allocation,
+    load_infimum,
+    lambda_infimum,
+    lambda_supremum,
+    solve_lambda,
+    tau_star,
+    tau_star_infimum,
+    tau_star_supremum,
+    uniform_allocation,
+)
+from repro.core.encoding import (  # noqa: F401
+    EncodePlan,
+    GaussianCode,
+    LTCode,
+    encode_matrix,
+    required_rows,
+    robust_soliton,
+)
+from repro.core.decoding import (  # noqa: F401
+    ls_decode,
+    masked_pinv_decode,
+    peel_decode_jax,
+    peel_decode_np,
+    peel_decode_plan,
+)
+from repro.core.coded_ops import (  # noqa: F401
+    CodedLinear,
+    block_mds_generator,
+    bpcc_batched_matvec,
+    coded_block_matmul,
+    decode_blocks,
+    encode_blocks,
+    row_coded_matvec,
+)
+from repro.core.gradient_coding import (  # noqa: F401
+    GradCode,
+    cyclic_code,
+    decode_weights,
+    frc_code,
+)
+from repro.core.simulator import (  # noqa: F401
+    SimResult,
+    accumulation_curve,
+    completion_time,
+    sample_rates,
+    simulate_scheme,
+)

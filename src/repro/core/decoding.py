@@ -1,0 +1,172 @@
+"""Decoders for coded computation.
+
+Three decoders, each matched to where it runs:
+
+  * ``peel_decode_np``  — host-side peeling decoder (paper §5.1's "LT codes
+    with peeling decoder").  Used by the cluster emulator / serving engine,
+    where results arrive asynchronously and decode runs on the master's CPU.
+  * ``peel_decode_jax`` — the same peeling algorithm as a fixed-shape
+    ``lax.while_loop`` (jit-able; dense membership matrix).  Exists so the
+    full BPCC dataflow can be expressed in one XLA program; intentionally not
+    a Pallas kernel — peeling is sequential and control-flow-bound, there is
+    no MXU win (see DESIGN.md §6).
+  * ``ls_decode`` / ``masked_pinv_decode`` — least-squares recovery for dense
+    (Gaussian) codes; the masked variant is the SPMD any-r-of-q path where
+    the erasure pattern arrives as a 0/1 mask of fixed shape.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.encoding import EncodePlan
+
+
+# --------------------------------------------------------------------------
+# Host peeling decoder
+# --------------------------------------------------------------------------
+def peel_decode_np(
+    coded: np.ndarray,
+    indices: np.ndarray,
+    coeffs: np.ndarray,
+    r: int,
+) -> tuple[np.ndarray, bool, int]:
+    """Peeling decode of LT-coded rows — O(nnz) with inverted index lists.
+
+    coded   [n, m]       — received coded rows (any subset/order of the plan)
+    indices [n, d_max]   — source members per received row
+    coeffs  [n, d_max]   — coefficients (0 = padding)
+    returns (y [r, m], ok, n_recovered)
+
+    Uses the classic id-sum/coeff-sum trick: per row we track the sum of
+    *unknown* member ids and coefficients, so a degree-1 row's remaining
+    member (and its coefficient) is read off in O(1) without adjacency
+    matrices — scales to the paper's r = 2×10⁴ scenarios.
+    """
+    n, m = coded.shape
+    vals = coded.astype(np.float64).copy()
+    live = coeffs != 0  # [n, d_max]
+    deg = live.sum(axis=1).astype(np.int64)
+    id_sum = (indices.astype(np.int64) * live).sum(axis=1)
+    cf_sum = (coeffs.astype(np.float64) * live).sum(axis=1)
+
+    # inverted index: for each source, the (row, coeff) pairs that contain it
+    rows_flat = np.repeat(np.arange(n, dtype=np.int64), indices.shape[1])
+    keep = live.reshape(-1)
+    rows_flat = rows_flat[keep]
+    cols_flat = indices.reshape(-1).astype(np.int64)[keep]
+    cfs_flat = coeffs.reshape(-1).astype(np.float64)[keep]
+    order = np.argsort(cols_flat, kind="stable")
+    rows_flat, cols_flat, cfs_flat = rows_flat[order], cols_flat[order], cfs_flat[order]
+    starts = np.searchsorted(cols_flat, np.arange(r + 1))
+
+    y = np.zeros((r, m), dtype=np.float64)
+    known = np.zeros(r, dtype=bool)
+    ripple = list(np.flatnonzero(deg == 1))
+    n_rec = 0
+    while ripple and n_rec < r:
+        j = ripple.pop()
+        if deg[j] != 1:
+            continue
+        src = int(id_sum[j])
+        cf = cf_sum[j]
+        deg[j] = 0
+        if known[src] or cf == 0.0:
+            continue
+        y[src] = vals[j] / cf
+        known[src] = True
+        n_rec += 1
+        # subtract src from every row that contains it
+        sl = slice(starts[src], starts[src + 1])
+        members, mcfs = rows_flat[sl], cfs_flat[sl]
+        act = deg[members] > 0
+        members, mcfs = members[act], mcfs[act]
+        vals[members] -= np.outer(mcfs, y[src])
+        id_sum[members] -= src
+        cf_sum[members] -= mcfs
+        deg[members] -= 1
+        ripple.extend(int(t) for t in members[deg[members] == 1])
+    return y.astype(coded.dtype, copy=False), bool(n_rec >= r), n_rec
+
+
+def peel_decode_plan(
+    coded_full: np.ndarray, plan: EncodePlan, received: np.ndarray
+) -> tuple[np.ndarray, bool, int]:
+    """Convenience: decode from the full coded buffer + a bool received-mask."""
+    sel = np.flatnonzero(received)
+    return peel_decode_np(coded_full[sel], plan.indices[sel], plan.coeffs[sel], plan.r)
+
+
+# --------------------------------------------------------------------------
+# JAX peeling decoder (fixed shapes, lax.while_loop)
+# --------------------------------------------------------------------------
+def peel_decode_jax(coded: jnp.ndarray, membership: jnp.ndarray, r: int):
+    """Peeling with dense membership [n, r] (float coefficients; 0 = absent).
+
+    Fixed-shape, jit-able. Returns (y [r, m], known [r] bool).
+    One source symbol is recovered per iteration; the loop runs until the
+    ripple empties or all r are known — O(r) iterations, each O(n·r + n·m).
+    """
+    n = coded.shape[0]
+
+    def cond(state):
+        vals, w, y, known, _it = state
+        deg = (w != 0).sum(axis=1)
+        return jnp.logical_and(jnp.any(deg == 1), ~jnp.all(known))
+
+    def body(state):
+        vals, w, y, known, it = state
+        deg = (w != 0).sum(axis=1)
+        j = jnp.argmax(deg == 1)  # first degree-1 row
+        wj = w[j]
+        src = jnp.argmax(wj != 0)
+        yv = vals[j] / wj[src]
+        fresh = ~known[src]
+        y = y.at[src].set(jnp.where(fresh, yv, y[src]))
+        known = known.at[src].set(True)
+        col = w[:, src]
+        vals = vals - col[:, None] * y[src][None, :]
+        w = w.at[:, src].set(0.0)
+        return vals, w, y, known, it + 1
+
+    y0 = jnp.zeros((r, coded.shape[1]), coded.dtype)
+    known0 = jnp.zeros(r, bool)
+    state = (coded.astype(jnp.float32), membership.astype(jnp.float32), y0, known0, 0)
+    _, _, y, known, _ = jax.lax.while_loop(cond, body, state)
+    return y, known
+
+
+# --------------------------------------------------------------------------
+# Least-squares decoders (dense codes / SPMD path)
+# --------------------------------------------------------------------------
+def ls_decode(g_rows: jnp.ndarray, coded: jnp.ndarray) -> jnp.ndarray:
+    """Solve G y = coded for y given >= r received rows of a dense code."""
+    gtg = g_rows.T @ g_rows
+    gty = g_rows.T @ coded
+    return jnp.linalg.solve(gtg + 1e-6 * jnp.eye(gtg.shape[0], dtype=gtg.dtype), gty)
+
+
+def masked_pinv_decode(
+    g_full: jnp.ndarray, coded_full: jnp.ndarray, mask: jnp.ndarray
+) -> jnp.ndarray:
+    """Any-r-of-q recovery with a fixed-shape erasure mask (SPMD path).
+
+    g_full     [q, r] — full dense generator
+    coded_full [q, m] — all coded results (stragglers' entries are garbage)
+    mask       [q]    — 1.0 where the row actually arrived
+
+    y = (Gᵀ M G + λI)⁻¹ Gᵀ M ŷ  — weighted normal equations; erased rows get
+    zero weight so garbage never influences the solve.  Deterministic shape →
+    lowers to plain matmul + cholesky in XLA, differentiable, shardable.
+    """
+    gm = g_full * mask[:, None]
+    gtg = gm.T @ g_full
+    gty = gm.T @ (coded_full * mask[:, None])
+    lam = 1e-7 * jnp.trace(gtg) / gtg.shape[0]
+    a = gtg + lam * jnp.eye(gtg.shape[0], dtype=gtg.dtype)
+    y = jnp.linalg.solve(a, gty)
+    # one step of iterative refinement: recovers most of the f32 solve error
+    y = y + jnp.linalg.solve(a, gty - a @ y)
+    return y

@@ -1,0 +1,104 @@
+"""Shifted-exponential batch-completion model (paper Eq. 3 / Eq. 21).
+
+The paper models the waiting time for the master to receive the k-th batch
+from worker i as
+
+    Pr[T_{k,i} <= t] = 1 - exp(-mu_i * (t / (k * b_i) - alpha_i)),   t >= k b_i alpha_i
+
+i.e. the time to produce ``rows`` coded rows is ``rows * (alpha + E/mu)`` in
+expectation, where E ~ Exp(1).  Equivalently  T(rows) = rows * (alpha + X/mu)
+with X ~ Exp(1) drawn once per (worker, task) — the *scale* grows linearly
+with the assigned rows, matching Eq. (21): Pr[T <= t] = 1 - e^{-(mu/r)(t - alpha r)}.
+
+This module provides:
+  * sampling of batch-arrival times for a worker (used by the simulator and
+    the cluster emulator),
+  * the CDF/mean utilities used by the allocation math,
+  * maximum-likelihood estimation of (mu, alpha) from observed completion
+    times — the procedure of paper §5.2 (Table 1), reused online by
+    ``repro.runtime.health``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.utils.prng import rng as _rng
+
+
+@dataclass(frozen=True)
+class ShiftedExp:
+    """Per-worker straggling model: straggle rate ``mu`` and shift ``alpha``.
+
+    Both are positive; larger mu = less straggling, larger alpha = slower
+    deterministic per-row compute.
+    """
+
+    mu: float
+    alpha: float
+
+    def __post_init__(self):
+        if self.mu <= 0 or self.alpha <= 0:
+            raise ValueError(f"mu and alpha must be positive, got {self}")
+
+    # ---- distribution of the time to finish `rows` rows ---------------
+    def cdf(self, t: np.ndarray | float, rows: float) -> np.ndarray:
+        """Pr[T(rows) <= t] per Eq. (3) with k*b_i == rows."""
+        t = np.asarray(t, dtype=np.float64)
+        z = self.mu * (t / rows - self.alpha)
+        return np.where(t >= rows * self.alpha, 1.0 - np.exp(-np.clip(z, 0.0, 700.0)), 0.0)
+
+    def mean_time(self, rows: float) -> float:
+        """E[T(rows)] = rows * (alpha + 1/mu)."""
+        return rows * (self.alpha + 1.0 / self.mu)
+
+    def quantile(self, p: float, rows: float) -> float:
+        """Inverse CDF."""
+        return rows * (self.alpha - np.log1p(-p) / self.mu)
+
+    # ---- sampling ------------------------------------------------------
+    def sample_task_rate(self, seed: int, n: int = 1) -> np.ndarray:
+        """Sample per-task effective seconds-per-row:  alpha + X/mu, X~Exp(1).
+
+        One draw applies to the *whole* task of a worker: batch k of size b
+        completes at  k*b*(alpha + X/mu), matching the paper's model where
+        T_{k,i} is the k-batch waiting time and batches of one task share the
+        same straggling realization (the EC2 behaviour §5.2 fits).
+        """
+        g = _rng(seed)
+        return self.alpha + g.exponential(1.0, size=n) / self.mu
+
+    def batch_arrival_times(self, loads_rows: np.ndarray, seed: int) -> np.ndarray:
+        """Arrival times of cumulative row counts ``loads_rows`` (1-D, ascending)."""
+        rate = self.sample_task_rate(seed, 1)[0]
+        return np.asarray(loads_rows, dtype=np.float64) * rate
+
+
+def sample_heterogeneous_cluster(
+    n_workers: int, seed: int, mu_range: tuple[float, float] = (1.0, 50.0)
+) -> list[ShiftedExp]:
+    """Paper §4.1.3: mu_i ~ U[1, 50], alpha_i = 1/mu_i."""
+    g = _rng(seed)
+    mus = g.uniform(mu_range[0], mu_range[1], size=n_workers)
+    return [ShiftedExp(mu=float(m), alpha=float(1.0 / m)) for m in mus]
+
+
+def estimate_parameters(times: np.ndarray, rows: float) -> ShiftedExp:
+    """Estimate (mu, alpha) from i.i.d. completion times of a `rows`-row task.
+
+    Paper §5.2: t0 = min(t) identifies alpha = t0 / rows; the exponential tail
+    rate is the MLE  mu = 1 / mean(t/rows - alpha).  A small-sample bias
+    correction (n/(n-1)) is applied to the tail mean.
+    """
+    times = np.asarray(times, dtype=np.float64)
+    if times.ndim != 1 or times.size < 2:
+        raise ValueError("need >= 2 samples")
+    t0 = float(times.min())
+    alpha = t0 / rows
+    excess = times / rows - alpha
+    n = times.size
+    tail_mean = float(excess.sum() / max(n - 1, 1))  # exclude the zero at argmin
+    if tail_mean <= 0:
+        tail_mean = 1e-12
+    return ShiftedExp(mu=1.0 / tail_mean, alpha=max(alpha, 1e-12))

@@ -1,0 +1,189 @@
+"""Erasure codes for coded computation.
+
+Two code families, matching the paper's usage:
+
+  * ``LTCode`` — Luby Transform fountain code with the robust-soliton degree
+    distribution and a peeling decoder (paper §5.1, following Mallick et al.
+    [40]).  Recovery needs any ``r(1+eps)`` coded rows; the paper uses
+    eps = 0.13.  Encoding is sparse: coded row j = sum of ``deg_j`` source
+    rows (coefficients 1), so the encode is a gather+add — implemented both
+    here (numpy/jnp reference) and as a Pallas TPU kernel
+    (``repro.kernels.lt_encode``).
+
+  * ``GaussianCode`` — dense i.i.d. N(0, 1/r) generator; any r rows are
+    full-rank w.p. 1 (the generic "H with any-r-rows-independent" code of
+    paper §2.2.2).  Decoding is a least-squares solve; used on the SPMD path
+    where fixed shapes + masked pseudo-inverse fit XLA.
+
+Both produce an ``EncodePlan`` that worker-side sharding consumes: the plan
+rows are laid out worker-major in the order of ``Allocation.loads`` so worker
+i owns plan rows [offset_i, offset_i + l_i).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import cached_property
+
+import numpy as np
+
+from repro.utils.prng import derive, rng as _rng
+
+DEFAULT_OVERHEAD = 0.13  # paper §5.1: eps = 0.13
+
+
+# --------------------------------------------------------------------------
+# Plans
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class EncodePlan:
+    """A q×r generator in padded-sparse form.
+
+    indices  [q, d_max] int32 — source-row ids per coded row (padded)
+    coeffs   [q, d_max] float32 — coefficients (0 where padded)
+    r, q     — source rows / coded rows
+    kind     — 'lt' | 'gaussian' | 'systematic_lt'
+    """
+
+    indices: np.ndarray
+    coeffs: np.ndarray
+    r: int
+    q: int
+    kind: str
+
+    def __post_init__(self):
+        assert self.indices.shape == self.coeffs.shape
+        assert self.indices.shape[0] == self.q
+
+    @property
+    def d_max(self) -> int:
+        return self.indices.shape[1]
+
+    @cached_property
+    def degrees(self) -> np.ndarray:
+        return (self.coeffs != 0).sum(axis=1).astype(np.int32)
+
+    def dense_generator(self) -> np.ndarray:
+        """Materialize G as a dense [q, r] float32 matrix (tests / LS decode)."""
+        g = np.zeros((self.q, self.r), dtype=np.float32)
+        rows = np.repeat(np.arange(self.q), self.d_max)
+        cols = self.indices.reshape(-1)
+        vals = self.coeffs.reshape(-1)
+        np.add.at(g, (rows, cols), vals)
+        return g
+
+    def slice_rows(self, start: int, stop: int) -> "EncodePlan":
+        return EncodePlan(
+            indices=self.indices[start:stop],
+            coeffs=self.coeffs[start:stop],
+            r=self.r,
+            q=stop - start,
+            kind=self.kind,
+        )
+
+
+def required_rows(r: int, kind: str, overhead: float = DEFAULT_OVERHEAD) -> int:
+    """Rows needed for recovery w.h.p.: r for dense codes, r(1+eps) for LT."""
+    if kind == "gaussian":
+        return r
+    return int(np.ceil(r * (1.0 + overhead)))
+
+
+# --------------------------------------------------------------------------
+# Robust soliton
+# --------------------------------------------------------------------------
+def robust_soliton(r: int, c: float = 0.03, delta: float = 0.5) -> np.ndarray:
+    """Robust-soliton pmf over degrees 1..r (Luby 2002)."""
+    if r < 2:
+        return np.array([1.0])
+    d = np.arange(1, r + 1, dtype=np.float64)
+    rho = np.zeros(r)
+    rho[0] = 1.0 / r
+    rho[1:] = 1.0 / (d[1:] * (d[1:] - 1.0))
+    s = c * np.log(r / delta) * np.sqrt(r)
+    s = min(max(s, 1.0 + 1e-9), float(r))
+    pivot = int(np.floor(r / s))
+    tau = np.zeros(r)
+    if pivot >= 2:
+        dd = np.arange(1, pivot, dtype=np.float64)
+        tau[: pivot - 1] = s / (dd * r)
+    if 1 <= pivot <= r:
+        tau[pivot - 1] = s * np.log(s / delta) / r if s > delta else tau[pivot - 1]
+    pmf = rho + tau
+    return pmf / pmf.sum()
+
+
+# --------------------------------------------------------------------------
+# Code families
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class LTCode:
+    """Luby-Transform code over the reals (coefficients = 1)."""
+
+    r: int
+    seed: int = 0
+    c: float = 0.03
+    delta: float = 0.5
+    systematic_prefix: bool = True  # first r coded rows = identity (common trick:
+    # lets the uncoded fast path reuse the same storage, and guarantees the
+    # no-straggler case decodes instantly)
+
+    def plan(self, q: int) -> EncodePlan:
+        if q < self.r and not self.systematic_prefix:
+            raise ValueError("q must be >= r")
+        g = _rng(derive(self.seed, "lt", self.r, q))
+        pmf = robust_soliton(self.r, self.c, self.delta)
+        n_random = q - self.r if self.systematic_prefix else q
+        n_random = max(n_random, 0)
+        degs = g.choice(np.arange(1, self.r + 1), size=n_random, p=pmf) if n_random else (
+            np.zeros(0, np.int64)
+        )
+        d_max = int(max(int(degs.max()) if n_random else 1, 1))
+        idx = np.zeros((q, d_max), dtype=np.int32)
+        cof = np.zeros((q, d_max), dtype=np.float32)
+        row = 0
+        if self.systematic_prefix:
+            n_sys = min(self.r, q)
+            idx[:n_sys, 0] = np.arange(n_sys, dtype=np.int32)
+            cof[:n_sys, 0] = 1.0
+            row = n_sys
+        for j in range(n_random):
+            d = int(degs[j])
+            members = g.choice(self.r, size=d, replace=False)
+            idx[row + j, :d] = members
+            cof[row + j, :d] = 1.0
+        kind = "systematic_lt" if self.systematic_prefix else "lt"
+        return EncodePlan(indices=idx, coeffs=cof, r=self.r, q=q, kind=kind)
+
+
+@dataclass(frozen=True)
+class GaussianCode:
+    """Dense random code: G ~ N(0, 1/r); any r rows invertible a.s."""
+
+    r: int
+    seed: int = 0
+
+    def plan(self, q: int) -> EncodePlan:
+        g = _rng(derive(self.seed, "gauss", self.r, q))
+        dense = (g.standard_normal((q, self.r)) / np.sqrt(self.r)).astype(np.float32)
+        # padded-sparse with d_max = r (fully dense)
+        idx = np.broadcast_to(np.arange(self.r, dtype=np.int32), (q, self.r)).copy()
+        return EncodePlan(indices=idx, coeffs=dense, r=self.r, q=q, kind="gaussian")
+
+
+# --------------------------------------------------------------------------
+# Encoding (numpy reference — the Pallas kernel mirrors this)
+# --------------------------------------------------------------------------
+def encode_matrix(a: np.ndarray, plan: EncodePlan, chunk: int = 4096) -> np.ndarray:
+    """Â = G A  computed chunk-wise:  Â[j] = Σ_d coeffs[j,d] * A[indices[j,d]].
+
+    Memory-bounded (never materializes [q, d_max, m] for large q).
+    """
+    r, m = a.shape
+    if r != plan.r:
+        raise ValueError(f"A has {r} rows, plan expects {plan.r}")
+    out = np.empty((plan.q, m), dtype=np.result_type(a.dtype, np.float32))
+    for s in range(0, plan.q, chunk):
+        e = min(s + chunk, plan.q)
+        gathered = a[plan.indices[s:e]]  # [c, d_max, m]
+        out[s:e] = np.einsum("cd,cdm->cm", plan.coeffs[s:e], gathered)
+    return out

@@ -1,0 +1,130 @@
+"""Coded gradient aggregation — beyond-paper straggler tolerance for DP.
+
+The paper codes a *linear map of a fixed input* (Â x).  A data-parallel
+gradient step is also a linear aggregation — sum_j g_j over microbatch
+shards — so the same redundancy idea applies (gradient coding, Tandon et
+al., cited as [22] by the paper).  This module brings BPCC-style straggler
+tolerance to the training path:
+
+  * **FRC (fractional repetition)** — workers are grouped into blocks of
+    (s+1); every worker in a group computes the same group-sum of shards.
+    Tolerates any s stragglers; decode = pick one survivor per group.
+    Deterministic, exact, and the decode is a masked selection — ideal for
+    SPMD.  Requires (s+1) | n_workers.
+  * **CRC (cyclic repetition)** — worker i holds shards {i..i+s} (mod n)
+    with random coefficients; decode solves a tiny regularized LS for the
+    recombination vector v with vᵀ(MB) = 1ᵀ.  Works for any n, s.
+
+Both return fixed-shape decode weights, so the aggregation is
+``sum_i v_i(mask) * msg_i`` — one weighted all-reduce, mask-driven.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.utils.prng import rng as _rng
+
+__all__ = ["GradCode", "frc_code", "cyclic_code", "decode_weights"]
+
+
+@dataclass(frozen=True)
+class GradCode:
+    """Assignment + encoding for coded gradient aggregation.
+
+    B [n_workers, n_shards] — worker i sends  msg_i = sum_j B[i,j] grad_j.
+    Any mask with >= n_workers - s survivors admits v(mask) with
+    vᵀ (M B) = 1ᵀ, so  sum_i v_i m_i msg_i = sum_j grad_j  exactly (FRC) or
+    to LS precision (CRC).
+    """
+
+    b: np.ndarray          # [n, n_shards]
+    s: int                 # straggler tolerance
+    kind: str              # 'frc' | 'cyclic'
+
+    @property
+    def n_workers(self) -> int:
+        return self.b.shape[0]
+
+    @property
+    def n_shards(self) -> int:
+        return self.b.shape[1]
+
+    def shards_of(self, worker: int) -> np.ndarray:
+        return np.flatnonzero(self.b[worker])
+
+    @property
+    def replication(self) -> float:
+        """Compute overhead: shards evaluated per worker (s+1 for both kinds)."""
+        return float((self.b != 0).sum() / self.n_workers)
+
+
+def frc_code(n_workers: int, s: int) -> GradCode:
+    """Fractional repetition code: groups of (s+1) identical workers."""
+    if n_workers % (s + 1) != 0:
+        raise ValueError(f"(s+1)={s + 1} must divide n_workers={n_workers}")
+    n_groups = n_workers // (s + 1)
+    b = np.zeros((n_workers, n_workers), dtype=np.float64)
+    for g in range(n_groups):
+        shard_block = slice(g * (s + 1), (g + 1) * (s + 1))
+        for w in range(g * (s + 1), (g + 1) * (s + 1)):
+            b[w, shard_block] = 1.0
+    return GradCode(b=b, s=s, kind="frc")
+
+
+def cyclic_code(n_workers: int, s: int, seed: int = 0) -> GradCode:
+    """Cyclic repetition, Tandon et al. Algorithm-2 construction.
+
+    Draw H [s, n] with columns summing to zero (so H·1 = 0, i.e. the all-ones
+    vector lies in null(H)); build each row of B inside null(H) with support
+    {i..i+s} mod n.  Any (n−s) rows of B then span null(H) ∋ 1 — the *span
+    condition* that makes exact decode possible for every ≤ s-straggler
+    pattern.  (Random coefficients on the support do NOT satisfy this.)
+    """
+    n = n_workers
+    for attempt in range(64):  # resample H if an unlucky draw gives huge coeffs
+        g = _rng(seed + 1000003 * attempt)
+        h = g.standard_normal((s, n))
+        h[:, -1] = -h[:, :-1].sum(axis=1)  # columns sum to 0  ->  H 1 = 0
+        b = np.zeros((n, n), dtype=np.float64)
+        ok = True
+        for i in range(n):
+            cols = (i + np.arange(s + 1)) % n
+            sub = h[:, cols[1:]]
+            if np.linalg.cond(sub) > 1e4:
+                ok = False
+                break
+            b[i, cols[0]] = 1.0
+            # remaining s coefficients solve  H[:, cols] · B[i, cols]ᵀ = 0
+            b[i, cols[1:]] = np.linalg.solve(sub, -h[:, cols[0]])
+        if ok and np.abs(b).max() < 50.0:
+            return GradCode(b=b, s=s, kind="cyclic")
+    raise RuntimeError("could not draw a well-conditioned cyclic code")  # pragma: no cover
+
+
+def decode_weights(code: GradCode, mask: jnp.ndarray) -> jnp.ndarray:
+    """v(mask) with vᵀ (M B) = 1ᵀ — the recombination weights.
+
+    FRC: exact closed form — first survivor of each group gets weight 1.
+    CRC: regularized least-squares on the (n x n) masked generator + one
+    refinement step.  Fixed shapes throughout (jit/shard-safe).
+    """
+    m = mask.astype(jnp.float32)
+    if code.kind == "frc":
+        n, s1 = code.n_workers, code.s + 1
+        groups = m.reshape(n // s1, s1)
+        # weight 1 for the first alive worker in each group, 0 elsewhere
+        first = jnp.cumsum(groups, axis=1) * groups  # 1 at first alive, >1 after
+        sel = (first == 1.0).astype(jnp.float32)
+        return sel.reshape(n)
+    b = jnp.asarray(code.b, dtype=jnp.float32)
+    a = (b * m[:, None]).T                   # [n_shards, n]:  A v = 1
+    pinv = jnp.linalg.pinv(a, rtol=1e-6)     # SVD — avoids cond² of normal eqs
+    ones = jnp.ones((code.n_shards,), dtype=jnp.float32)
+    v = pinv @ ones
+    for _ in range(2):                       # refinement against A itself
+        v = v + pinv @ (ones - a @ v)
+    return v * m

@@ -1,0 +1,1 @@
+from repro.kernels.ops import coded_matvec, lt_encode, ssd_forward  # noqa: F401

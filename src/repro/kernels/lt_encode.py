@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: LT fountain encode  Â[j] = Σ_d coeffs[j,d]·A[indices[j,d]].
+
+The encode is a sparse row-gather + accumulate.  On TPU, arbitrary dynamic
+gathers inside a kernel are expressed with **scalar prefetch**: the degree
+table (indices, coeffs) is prefetched to SMEM and the A BlockSpec's
+index_map reads the *source row id* from it — the DMA engine then streams
+exactly the needed [1, BM] row panel HBM->VMEM per grid step:
+
+    grid = (q, M/BM, d_max)   (d innermost: output panel accumulates in VMEM)
+    A block     (1, BM)  at (indices[i, d], j)
+    out block   (1, BM)  at (i, j)
+
+Padding entries (coeff 0) gather row 0 and multiply by zero.  Row blocks of
+height 1 trade MXU alignment for gather flexibility — acceptable because
+encode is (a) offline in the paper (Â pre-stored) and (b) bandwidth-bound,
+not FLOP-bound; the roofline charges it to the memory term.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["lt_encode_pallas"]
+
+
+def _kernel(idx_ref, cf_ref, a_ref, o_ref):
+    i = pl.program_id(0)
+    d = pl.program_id(2)
+
+    @pl.when(d == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += cf_ref[i, d] * a_ref[...].astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def lt_encode_pallas(
+    a: jnp.ndarray,         # [r, M] source matrix
+    indices: jnp.ndarray,   # [q, d_max] int32 source-row ids (padded)
+    coeffs: jnp.ndarray,    # [q, d_max] float32 (0 = padding)
+    *,
+    block_m: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    r, m = a.shape
+    q, d_max = indices.shape
+    bm = min(block_m, m)
+    mp = -(-m // bm) * bm
+    a_p = jnp.pad(a, ((0, 0), (0, mp - m)))
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(q, mp // bm, d_max),
+            in_specs=[
+                pl.BlockSpec((1, bm), lambda i, j, d, idx_ref, cf_ref: (idx_ref[i, d], j)),
+            ],
+            out_specs=pl.BlockSpec((1, bm), lambda i, j, d, idx_ref, cf_ref: (i, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((q, mp), jnp.float32),
+        interpret=interpret,
+    )(indices.astype(jnp.int32), coeffs.astype(jnp.float32), a_p)
+    return out[:, :m]

@@ -1,0 +1,103 @@
+"""jit'd public wrappers over the Pallas kernels (with jnp fallback).
+
+``use_pallas='interpret'`` (default here) runs the kernel bodies through
+the Pallas interpreter — bit-faithful to the TPU kernel dataflow, executable
+on CPU.  On real TPU pass ``use_pallas='compile'``.  ``'off'`` routes to the
+pure-jnp reference (the oracle itself), useful for A/B in benchmarks.
+"""
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.coded_matvec import coded_matvec_pallas
+from repro.kernels.lt_encode import lt_encode_pallas
+from repro.kernels.ssd_scan import ssd_chunk_pallas, ssd_combine_pallas
+
+Mode = Literal["interpret", "compile", "off"]
+
+__all__ = ["coded_matvec", "lt_encode", "ssd_forward"]
+
+
+def coded_matvec(a, x, mode: Mode = "interpret", **kw):
+    if mode == "off":
+        return _ref.ref_coded_matvec(a, x)
+    return coded_matvec_pallas(a, x, interpret=(mode == "interpret"), **kw)
+
+
+def lt_encode(a, indices, coeffs, mode: Mode = "interpret", **kw):
+    if mode == "off":
+        return _ref.ref_lt_encode(a, indices, coeffs)
+    return lt_encode_pallas(a, indices, coeffs, interpret=(mode == "interpret"), **kw)
+
+
+def ssd_forward(
+    x: jnp.ndarray,    # [B, S, H, P] (pre-multiplied by dt)
+    da: jnp.ndarray,   # [B, S, H]
+    b: jnp.ndarray,    # [B, S, G, N]
+    c: jnp.ndarray,    # [B, S, G, N]
+    chunk: int,
+    mode: Mode = "interpret",
+    h0: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Full SSD using the Pallas chunk kernels + jnp inter-chunk scan.
+
+    Drop-in equivalent of ``repro.models.ssm.ssd_chunked`` (the oracle).
+    Returns (y [B,S,H,P], final_state [B,H,P,N]).
+    """
+    bsz, s, h, p = x.shape
+    g_, n = b.shape[2], b.shape[3]
+    q = min(chunk, s)
+    if s % q:
+        raise ValueError(f"seq {s} must divide chunk {q} on the kernel path")
+    nc = s // q
+    rep = h // g_
+    # head-expand + flatten to per-(b,h,chunk) cells
+    bh = jnp.repeat(b, rep, axis=2)
+    ch = jnp.repeat(c, rep, axis=2)
+
+    def cells(t, feat):  # [B,S,H,F] -> [B*H*nc, Q, F]
+        t = t.reshape(bsz, nc, q, h, feat).transpose(0, 3, 1, 2, 4)
+        return t.reshape(bsz * h * nc, q, feat)
+
+    xc = cells(x, p)
+    bc = cells(bh, n)
+    cc = cells(ch, n)
+    dac = da.reshape(bsz, nc, q, h).transpose(0, 3, 1, 2).reshape(bsz * h * nc, q)
+
+    if mode == "off":
+        y, st, dec, cum = _ref.ref_ssd_chunk(xc, dac, bc, cc)
+    else:
+        y, st, dec, cum = ssd_chunk_pallas(
+            xc, dac, bc, cc, interpret=(mode == "interpret")
+        )
+
+    # inter-chunk recurrence (sequential over nc — stays in jnp)
+    st_r = st.reshape(bsz * h, nc, p, n)
+    dec_r = dec.reshape(bsz * h, nc)
+    init = (
+        jnp.zeros((bsz * h, p, n), jnp.float32)
+        if h0 is None
+        else h0.reshape(bsz * h, p, n).astype(jnp.float32)
+    )
+
+    def step(carry, inp):
+        s_c, d_c = inp
+        return carry * d_c[:, None, None] + s_c, carry
+
+    final, states_in = jax.lax.scan(
+        step, init, (st_r.transpose(1, 0, 2, 3), dec_r.T)
+    )
+    states_in = states_in.transpose(1, 0, 2, 3).reshape(bsz * h * nc, p, n)
+
+    if mode == "off":
+        y_off = _ref.ref_ssd_combine(cc, cum, states_in)
+    else:
+        y_off = ssd_combine_pallas(cc, cum, states_in, interpret=(mode == "interpret"))
+
+    y_tot = (y + y_off).reshape(bsz, h, nc, q, p).transpose(0, 2, 3, 1, 4)
+    y_tot = y_tot.reshape(bsz, s, h, p).astype(x.dtype)
+    return y_tot, final.reshape(bsz, h, p, n)

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests).
+
+Each function is the mathematical definition with no tiling/layout
+concerns; kernels must match these to fp32 tolerance over shape/dtype
+sweeps (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ref_coded_matvec", "ref_lt_encode", "ref_ssd_chunk", "ref_ssd_combine"]
+
+
+def ref_coded_matvec(a: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """y = A x (x may be [M] or thin [M, B]); fp32 accumulation."""
+    return jnp.dot(a.astype(jnp.float32), x.astype(jnp.float32))
+
+
+def ref_lt_encode(a: jnp.ndarray, indices: jnp.ndarray, coeffs: jnp.ndarray) -> jnp.ndarray:
+    """Â[j] = Σ_d coeffs[j,d] · A[indices[j,d]]   (padded-sparse generator)."""
+    gathered = a[indices]  # [q, d_max, m]
+    return jnp.einsum("qd,qdm->qm", coeffs.astype(jnp.float32), gathered.astype(jnp.float32))
+
+
+def ref_ssd_chunk(x, da, b, c):
+    """Intra-chunk SSD terms for ONE (batch*head, chunk) slice, batched.
+
+    x  [G, Q, P]  (pre-multiplied by dt)
+    da [G, Q]     (dt * A)
+    b  [G, Q, N]  (head-expanded)
+    c  [G, Q, N]
+    returns (y_diag [G,Q,P], states [G,P,N], total_decay [G],
+             da_cumsum [G,Q])
+    """
+    daf = da.astype(jnp.float32)
+    cum = jnp.cumsum(daf, axis=-1)                       # [G, Q]
+    diff = cum[..., :, None] - cum[..., None, :]         # [G, Q, Q]
+    q = x.shape[-2]
+    mask = jnp.arange(q)[:, None] >= jnp.arange(q)[None, :]
+    ell = jnp.where(mask, jnp.exp(diff), 0.0)
+    cb = jnp.einsum("gln,gsn->gls", c.astype(jnp.float32), b.astype(jnp.float32))
+    y = jnp.einsum("gls,gls,gsp->glp", cb, ell, x.astype(jnp.float32))
+    decay_states = jnp.exp(cum[..., -1:] - cum)          # [G, Q]
+    states = jnp.einsum("gsp,gs,gsn->gpn", x.astype(jnp.float32), decay_states,
+                        b.astype(jnp.float32))
+    return y, states, jnp.exp(cum[..., -1]), cum
+
+
+def ref_ssd_combine(c, cum, states_in):
+    """Inter-chunk output: y_off[l] = exp(cum_l) * C_l · state_in.
+
+    c [G, Q, N], cum [G, Q], states_in [G, P, N] -> [G, Q, P]."""
+    return jnp.einsum(
+        "gln,gpn,gl->glp", c.astype(jnp.float32), states_in.astype(jnp.float32),
+        jnp.exp(cum.astype(jnp.float32)),
+    )

@@ -1,0 +1,119 @@
+"""Pallas TPU kernels for the Mamba-2 SSD intra-chunk compute.
+
+The SSD algorithm splits the sequence into chunks of Q; per chunk the work
+is matmul-shaped (the whole point of state-space *duality*) and MXU-
+friendly — these two kernels own it, while the O(S/Q) inter-chunk state
+recurrence stays a jnp ``lax.scan`` (sequential, tiny, not kernel-worthy):
+
+  kernel 1 (``ssd_chunk``):  per (group, chunk) grid cell
+      L   = exp(segsum(dA))             [Q, Q]  fp32 in VMEM
+      y   = (C Bᵀ ∘ L) · X              [Q, P]
+      S_c = Xᵀ · (decay ∘ B)            [P, N]  chunk state contribution
+  kernel 2 (``ssd_combine``): y += exp(cumsum dA) ∘ (C · S_inᵀ)
+
+VMEM at Q=256, N=128, P=64 (fp32): L + CBᵀ 2x256 KB, X 64 KB, B/C 2x128 KB
+≈ 0.85 MB per cell — comfortable; Q is the tuning knob (see §Perf).
+Grid is (B·H, nc); head-expansion of grouped B/C happens in the wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["ssd_chunk_pallas", "ssd_combine_pallas"]
+
+
+def _chunk_kernel(x_ref, da_ref, b_ref, c_ref, y_ref, st_ref, dec_ref, cum_ref):
+    q = x_ref.shape[1]
+    da = da_ref[0].astype(jnp.float32)                    # [Q]
+    cum = jnp.cumsum(da)                                  # [Q]
+    diff = cum[:, None] - cum[None, :]                    # [Q, Q]
+    mask = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= jax.lax.broadcasted_iota(
+        jnp.int32, (q, q), 1
+    )
+    ell = jnp.where(mask, jnp.exp(diff), 0.0)
+    c = c_ref[0].astype(jnp.float32)                      # [Q, N]
+    b = b_ref[0].astype(jnp.float32)
+    x = x_ref[0].astype(jnp.float32)                      # [Q, P]
+    cb = jnp.dot(c, b.T, preferred_element_type=jnp.float32)   # [Q, Q]
+    y_ref[0] = jnp.dot(cb * ell, x, preferred_element_type=jnp.float32)
+    decay_states = jnp.exp(cum[-1] - cum)                 # [Q]
+    st_ref[0] = jnp.dot(
+        x.T, b * decay_states[:, None], preferred_element_type=jnp.float32
+    )                                                     # [P, N]
+    dec_ref[0, 0] = jnp.exp(cum[-1])
+    cum_ref[0] = cum
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk_pallas(
+    x: jnp.ndarray,    # [G, Q, P]  (G = B*H, pre-multiplied by dt)
+    da: jnp.ndarray,   # [G, Q]
+    b: jnp.ndarray,    # [G, Q, N]  head-expanded
+    c: jnp.ndarray,    # [G, Q, N]
+    *,
+    interpret: bool = True,
+):
+    """Returns (y_diag [G,Q,P], states [G,P,N], total_decay [G], cum [G,Q])."""
+    g, q, p = x.shape
+    n = b.shape[-1]
+    y, st, dec, cum = pl.pallas_call(
+        _chunk_kernel,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, q, p), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, q), lambda i: (i, 0)),
+            pl.BlockSpec((1, q, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, q, n), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q, p), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, p, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, q), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, q, p), jnp.float32),
+            jax.ShapeDtypeStruct((g, p, n), jnp.float32),
+            jax.ShapeDtypeStruct((g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((g, q), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, da, b, c)
+    return y, st, dec[:, 0], cum
+
+
+def _combine_kernel(c_ref, cum_ref, st_ref, y_ref):
+    c = c_ref[0].astype(jnp.float32)          # [Q, N]
+    cum = cum_ref[0].astype(jnp.float32)      # [Q]
+    st = st_ref[0].astype(jnp.float32)        # [P, N]
+    y_ref[0] = jnp.exp(cum)[:, None] * jnp.dot(
+        c, st.T, preferred_element_type=jnp.float32
+    )                                         # [Q, P]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_combine_pallas(
+    c: jnp.ndarray,         # [G, Q, N]
+    cum: jnp.ndarray,       # [G, Q]
+    states_in: jnp.ndarray, # [G, P, N]  (state entering each chunk)
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    g, q, n = c.shape
+    p = states_in.shape[1]
+    return pl.pallas_call(
+        _combine_kernel,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, q, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, q), lambda i: (i, 0)),
+            pl.BlockSpec((1, p, n), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q, p), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, q, p), jnp.float32),
+        interpret=interpret,
+    )(c, cum, states_in)

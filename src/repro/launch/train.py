@@ -1,0 +1,140 @@
+"""End-to-end training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch glm4-9b --smoke \\
+        --steps 100 --batch 8 --seq 128 --ckpt-dir /tmp/ck --ckpt-every 20
+
+Runs the full production stack on whatever devices exist (the CPU container
+runs reduced/smoke configs on a 1x1 mesh; a TPU pod runs the real configs on
+the production mesh): data pipeline -> pjit'd train step (microbatching,
+remat, optional coded gradient aggregation) -> AdamW (int8 moments
+optional) -> atomic checkpoints with restart, health-monitor hooks.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.configs import get_config
+from repro.data import make_pipeline
+from repro.models.registry import build_model
+from repro.optim import AdamWConfig, warmup_cosine
+from repro.runtime import latest_step, restore_checkpoint, save_checkpoint
+from repro.runtime.checkpoint import gc_checkpoints
+from repro.runtime.health import HealthMonitor
+from repro.sharding.ctx import sharding_hints
+from repro.sharding.policy import make_policy
+from repro.train.loop import TrainConfig, init_train_state, make_train_step
+
+
+def make_local_mesh():
+    n = len(jax.devices())
+    model = 1
+    while model * 2 <= n and n % (model * 2) == 0 and model < 16:
+        model *= 2
+    data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--smoke", action="store_true", help="reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--moment-dtype", default="float32",
+                    choices=["float32", "bfloat16", "int8"])
+    ap.add_argument("--gradient-coding", default=None, choices=[None, "frc", "cyclic"])
+    ap.add_argument("--gc-stragglers", type=int, default=1)
+    ap.add_argument("--straggler-prob", type=float, default=0.0,
+                    help="per-step probability a coded grad message is dropped")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = build_model(cfg)
+    mesh = make_local_mesh()
+    policy = make_policy(mesh, cfg)
+    print(f"[train] arch={cfg.name} (smoke={args.smoke}) mesh={dict(mesh.shape)} "
+          f"params~{model and sum(np.prod(s.shape) for s in jax.tree.leaves(model.param_shapes())):,}")
+
+    opt_cfg = AdamWConfig(
+        lr=warmup_cosine(args.lr, max(args.steps // 20, 1), args.steps),
+        moment_dtype=args.moment_dtype,
+    )
+    tc = TrainConfig(
+        microbatches=args.microbatches,
+        gradient_coding=args.gradient_coding,
+        gc_stragglers=args.gc_stragglers,
+    )
+    step_fn = make_train_step(model, opt_cfg, tc)
+
+    state_sds = jax.eval_shape(lambda k: init_train_state(model, k, opt_cfg),
+                               jax.random.key(args.seed))
+    state_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                            policy.state_specs(state_sds))
+    jit_step = jax.jit(step_fn, in_shardings=(state_sh, None, None),
+                       out_shardings=(state_sh, None), donate_argnums=(0,))
+
+    start = 0
+    if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        start, state = restore_checkpoint(args.ckpt_dir, state_sds,
+                                          shardings=state_sh)
+        print(f"[train] resumed from step {start}")
+    else:
+        with mesh:
+            state = jax.jit(
+                lambda k: init_train_state(model, k, opt_cfg), out_shardings=state_sh
+            )(jax.random.key(args.seed))
+
+    pipe = make_pipeline(cfg, seq=args.seq, global_batch=args.batch, seed=args.seed)
+    health = HealthMonitor(n_workers=max(args.microbatches, 1))
+    rng = np.random.default_rng(args.seed)
+    t0 = time.time()
+    tokens_done = 0
+    with mesh, sharding_hints(policy.hints()):
+        for step in range(start, args.steps):
+            batch = jax.tree.map(jnp.asarray, pipe.batch(step))
+            mask = None
+            if args.gradient_coding:
+                m = (rng.random(args.microbatches) >= args.straggler_prob)
+                if m.sum() < args.microbatches - args.gc_stragglers:
+                    idx = rng.choice(args.microbatches,
+                                     args.microbatches - args.gc_stragglers,
+                                     replace=False)
+                    m = np.zeros(args.microbatches, bool)
+                    m[idx] = True
+                mask = jnp.asarray(m, jnp.float32)
+            ts = time.time()
+            state, metrics = jit_step(state, batch, mask)
+            health.record(0, rows=args.batch * args.seq, seconds=max(time.time() - ts, 1e-9))
+            tokens_done += args.batch * args.seq
+            if (step + 1) % args.log_every == 0 or step == start:
+                print(f"[train] step {step+1:5d} loss={float(metrics['loss']):.4f} "
+                      f"gnorm={float(metrics['grad_norm']):.3f} "
+                      f"tok/s={tokens_done / (time.time() - t0):,.0f}")
+            if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+                save_checkpoint(args.ckpt_dir, step + 1, state, blocking=False)
+                gc_checkpoints(args.ckpt_dir, keep=3)
+    if args.ckpt_dir:
+        from repro.runtime.checkpoint import wait_for_saves
+
+        save_checkpoint(args.ckpt_dir, args.steps, state)
+        wait_for_saves()
+    print(f"[train] done in {time.time() - t0:.1f}s; "
+          f"final loss={float(metrics['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

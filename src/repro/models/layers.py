@@ -1,0 +1,120 @@
+"""Shared layer primitives (pure functions over param pytrees).
+
+No framework (flax/optax are not dependencies): a layer is
+``init_*(key, ...) -> params`` plus ``apply(params, x, ...) -> y``.
+Parameters are plain dicts of jnp arrays; the leading axis of block params
+is the layer axis consumed by ``lax.scan``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+def dense_init(key, shape, dtype, fan_in=None):
+    """Truncated-normal init scaled by 1/sqrt(fan_in) (fan_in = shape[-2])."""
+    fan = fan_in if fan_in is not None else shape[-2]
+    std = 1.0 / math.sqrt(max(fan, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(
+        dtype
+    )
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# RMSNorm
+# --------------------------------------------------------------------------
+def rmsnorm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """RMSNorm in fp32, cast back to x.dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies [head_dim // 2]."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x [..., S, H, Hd], positions [..., S] -> rotated x (pairwise halves)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)  # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * inv  # [..., S, hd/2]
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLP variants
+# --------------------------------------------------------------------------
+def init_mlp(key, d_model: int, d_ff: int, kind: str, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], (d_model, d_ff), dtype),
+            "w_up": dense_init(ks[1], (d_model, d_ff), dtype),
+            "w_down": dense_init(ks[2], (d_ff, d_model), dtype),
+        }
+    return {
+        "w_up": dense_init(ks[0], (d_model, d_ff), dtype),
+        "w_down": dense_init(ks[1], (d_ff, d_model), dtype),
+    }
+
+
+def mlp_apply(p: Params, x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    """x [..., D] -> [..., D].  swiglu | relu2 (Nemotron squared-ReLU) | gelu."""
+    if kind == "swiglu":
+        g = x @ p["w_gate"].astype(x.dtype)
+        u = x @ p["w_up"].astype(x.dtype)
+        h = jax.nn.silu(g) * u
+    elif kind == "relu2":
+        h = x @ p["w_up"].astype(x.dtype)
+        h = jnp.square(jax.nn.relu(h))
+    elif kind == "gelu":
+        h = x @ p["w_up"].astype(x.dtype)
+        h = jax.nn.gelu(h)
+    else:  # pragma: no cover
+        raise ValueError(f"unknown mlp kind {kind!r}")
+    return h @ p["w_down"].astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# misc
+# --------------------------------------------------------------------------
+def causal_mask(q_len: int, kv_len: int, q_offset) -> jnp.ndarray:
+    """[q_len, kv_len] bool — True where query may attend (kv_pos <= q_pos)."""
+    qpos = jnp.arange(q_len)[:, None] + q_offset
+    kpos = jnp.arange(kv_len)[None, :]
+    return kpos <= qpos
+
+
+def with_sharding(x: jnp.ndarray, spec) -> jnp.ndarray:
+    """Apply a sharding constraint if a PartitionSpec is given (no-op outside
+    jit / without a mesh context)."""
+    if spec is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x

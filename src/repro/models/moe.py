@@ -1,0 +1,121 @@
+"""Mixture-of-Experts with capacity-based scatter/gather dispatch.
+
+Dispatch never materializes the [T, E, C] one-hot tensor (Switch-style
+einsum dispatch is O(T·E·C) memory — 40 TB for the prefill_32k cells).
+Instead:
+
+  1. top-k routing (softmax over expert logits, renormalized top-k gates),
+  2. position-in-expert by cumsum over the flattened (T·k) assignments,
+     per-shard capacity C = ceil(cf · k · T / E),
+  3. scatter tokens into a [E·C+1, D] buffer (overflow slot E·C collects
+     capacity-dropped tokens and is discarded),
+  4. batched expert GEMM [E, C, D] x [E, D, F]  — experts sharded over the
+     `model` mesh axis (EP); XLA turns the scatter/gather into the
+     all-to-all exchange,
+  5. gather + gate-weighted combine back to [T, D].
+
+FLOPs scale with E·C ≈ cf·k·T — the *active* compute, preserving the MoE
+economics that make llama4-400b run like a 17B (roofline checks this).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, dense_init, init_mlp, mlp_apply
+from repro.sharding.ctx import shard_hint
+
+
+def init_moe(
+    key, d_model: int, d_ff: int, n_experts: int, kind: str, shared: bool, dtype
+) -> Params:
+    kr, ke, ks = jax.random.split(key, 3)
+    n_mats = 3 if kind == "swiglu" else 2
+    kmats = jax.random.split(ke, n_mats)
+    p: Params = {
+        "router": dense_init(kr, (d_model, n_experts), jnp.float32),
+        "w_up": dense_init(kmats[0], (n_experts, d_model, d_ff), dtype, fan_in=d_model),
+        "w_down": dense_init(kmats[1], (n_experts, d_ff, d_model), dtype, fan_in=d_ff),
+    }
+    if kind == "swiglu":
+        p["w_gate"] = dense_init(kmats[2], (n_experts, d_model, d_ff), dtype, fan_in=d_model)
+    if shared:
+        p["shared"] = init_mlp(ks, d_model, d_ff, kind, dtype)
+    return p
+
+
+def moe_apply(
+    p: Params,
+    x: jnp.ndarray,          # [B, S, D]
+    *,
+    top_k: int,
+    capacity_factor: float,
+    kind: str,
+    dispatch_groups: int = 1,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y [B,S,D], aux_loss scalar — load-balancing loss).
+
+    ``dispatch_groups`` = G > 1 computes position-in-expert with G
+    independent cumsums over token groups (capacity C/G each).  With G =
+    the DP shard count and batch-major token order, each cumsum is
+    shard-local — a global cumsum over a sharded token axis otherwise
+    lowers to a sequential cross-shard collective-permute chain (§Perf H5).
+    """
+    b, s, d = x.shape
+    e = p["router"].shape[1]
+    t = b * s
+    xf = x.reshape(t, d)
+    g_ = dispatch_groups if (t * top_k) % dispatch_groups == 0 else 1
+
+    # ---- routing (fp32) -------------------------------------------------
+    logits = (xf.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, top_k)            # [T, k]
+    gates = gates / jnp.clip(gates.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(jax.nn.one_hot(ids[:, 0], e, dtype=jnp.float32), axis=0)
+    ce = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(me * ce)
+
+    # ---- capacity + position-in-expert (per dispatch group) --------------
+    cap = int(max(1, -(-int(capacity_factor * top_k * t) // (e * g_))))  # ceil
+    ids_f = ids.reshape(-1)                              # [T*k] expert per slot
+    gates_f = gates.reshape(-1)
+    tg = (t * top_k) // g_
+    onehot = jax.nn.one_hot(ids_f.reshape(g_, tg), e, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=1) - 1                 # [G, tg, E] local count
+    pos = jnp.take_along_axis(
+        pos, ids_f.reshape(g_, tg)[..., None], axis=2)[..., 0].reshape(-1)
+    keep = pos < cap
+    grp = jnp.arange(t * top_k) // tg                    # group of each slot
+    slot = jnp.where(keep, (ids_f * g_ + grp) * cap + pos, e * g_ * cap)
+
+    # ---- dispatch: scatter to [E*G*C (+1 overflow), D] --------------------
+    xrep = jnp.repeat(xf, top_k, axis=0) if top_k > 1 else xf  # [T*k, D]
+    buf = jnp.zeros((e * g_ * cap + 1, d), x.dtype).at[slot].add(xrep)
+    h = buf[: e * g_ * cap].reshape(e, g_ * cap, d)
+    h = shard_hint(h, "moe_ecd")
+    cap = g_ * cap  # expert GEMM sees the concatenated group buffers
+
+    # ---- batched expert FFN ---------------------------------------------
+    dt = x.dtype
+    if kind == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", h, p["w_gate"].astype(dt))
+        u = jnp.einsum("ecd,edf->ecf", h, p["w_up"].astype(dt))
+        act = jax.nn.silu(g) * u
+    elif kind == "relu2":
+        act = jnp.square(jax.nn.relu(jnp.einsum("ecd,edf->ecf", h, p["w_up"].astype(dt))))
+    else:
+        act = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", h, p["w_up"].astype(dt)))
+    y_exp = jnp.einsum("ecf,efd->ecd", act, p["w_down"].astype(dt))
+    y_exp = shard_hint(y_exp, "moe_ecd")
+
+    # ---- combine: gather own slot, gate-weight, sum over k ----------------
+    y_buf = jnp.concatenate([y_exp.reshape(e * cap, d), jnp.zeros((1, d), dt)], axis=0)
+    y_tok = y_buf[slot] * (gates_f * keep).astype(dt)[:, None]  # [T*k, D]
+    y = y_tok.reshape(t, top_k, d).sum(axis=1) if top_k > 1 else y_tok
+
+    if "shared" in p:  # llama4's always-on shared expert
+        y = y + mlp_apply(p["shared"], xf, kind)
+    return y.reshape(b, s, d), aux

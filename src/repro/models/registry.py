@@ -1,0 +1,108 @@
+"""Model facade: one object per architecture with a uniform API.
+
+    model = build_model(cfg)
+    params = model.init(key)                       # real arrays (smoke tests)
+    shapes = model.param_shapes()                  # ShapeDtypeStructs (dry-run)
+    loss, metrics = model.loss(params, batch)      # train objective
+    logits, cache = model.prefill(params, batch)   # serving prefill
+    logits, cache = model.decode_step(params, cache, tokens)
+
+``input_specs(kind, ...)`` returns ShapeDtypeStruct stand-ins for every
+model input — weak-type-correct, shardable, no device allocation — which is
+what the multi-pod dry-run lowers against.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as ed
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+
+__all__ = ["Model", "build_model"]
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ---- parameters ---------------------------------------------------
+    def init(self, key) -> Any:
+        if self.cfg.family == "encdec":
+            return ed.init_encdec(key, self.cfg)
+        return tf.init_lm(key, self.cfg)
+
+    def param_shapes(self) -> Any:
+        return jax.eval_shape(self.init, jax.random.key(0))
+
+    # ---- training -------------------------------------------------------
+    def loss(self, params, batch) -> tuple[jnp.ndarray, dict]:
+        if self.cfg.family == "encdec":
+            return ed.encdec_loss(params, self.cfg, batch)
+        return tf.lm_loss(params, self.cfg, batch)
+
+    def forward(self, params, tokens, **kw):
+        if self.cfg.family == "encdec":
+            return ed.encdec_forward(params, self.cfg, kw["frames"], tokens)
+        return tf.lm_forward(params, self.cfg, tokens, kw.get("img"))[0]
+
+    # ---- serving ----------------------------------------------------------
+    def init_cache(self, batch: int, s_max: int) -> Any:
+        if self.cfg.family == "encdec":
+            return ed.encdec_init_cache(self.cfg, batch, s_max, s_src=s_max)
+        return tf.lm_init_cache(self.cfg, batch, s_max)
+
+    def cache_shapes(self, batch: int, s_max: int) -> Any:
+        return jax.eval_shape(lambda: self.init_cache(batch, s_max))
+
+    def prefill(self, params, batch: dict, s_max: int | None = None) -> tuple[jnp.ndarray, Any]:
+        if self.cfg.family == "encdec":
+            return ed.encdec_prefill(
+                params, self.cfg, batch["frames"], batch["tokens"], s_max=s_max
+            )
+        return tf.lm_prefill(
+            params, self.cfg, batch["tokens"], batch.get("img_embed"), s_max=s_max
+        )
+
+    def decode_step(self, params, cache, tokens, head_mask=None) -> tuple[jnp.ndarray, Any]:
+        if self.cfg.family == "encdec":
+            return ed.encdec_decode_step(params, self.cfg, cache, tokens)
+        return tf.lm_decode_step(params, self.cfg, cache, tokens, head_mask=head_mask)
+
+    # ---- dry-run input stand-ins -----------------------------------------
+    def input_specs(self, kind: str, batch: int, seq: int) -> dict[str, Any]:
+        """ShapeDtypeStructs for every input of the given step kind.
+
+        kind: 'train' (tokens+labels), 'prefill' (tokens), 'decode' (one
+        token per sequence; pair with ``cache_shapes(batch, seq)``).
+        """
+        cfg = self.cfg
+        tok = jnp.int32
+        d = cfg.d_model
+        if kind == "train":
+            spec = {"tokens": SDS((batch, seq), tok), "labels": SDS((batch, seq), tok)}
+            if cfg.family == "vlm":
+                spec["img_embed"] = SDS((batch, cfg.img_tokens, d), jnp.bfloat16)
+            if cfg.family == "encdec":
+                spec["frames"] = SDS((batch, seq, d), jnp.bfloat16)
+            return spec
+        if kind == "prefill":
+            spec = {"tokens": SDS((batch, seq), tok)}
+            if cfg.family == "vlm":
+                spec["img_embed"] = SDS((batch, cfg.img_tokens, d), jnp.bfloat16)
+            if cfg.family == "encdec":
+                spec["frames"] = SDS((batch, seq, d), jnp.bfloat16)
+            return spec
+        if kind == "decode":
+            return {"tokens": SDS((batch,), tok)}
+        raise ValueError(f"unknown step kind {kind!r}")
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg=cfg)

@@ -1,0 +1,227 @@
+"""Mamba-2 (SSD — state-space duality) blocks.
+
+The chunked SSD algorithm from Dao & Gu (arXiv:2405.21060): sequence split
+into chunks of length Q; within-chunk terms are plain matmuls (MXU-friendly
+— this is the part the Pallas kernel ``repro.kernels.ssd_scan`` tiles), and
+the cross-chunk term is a short ``lax.scan`` recurrence over running states
+[H, P, N].  Decode is the O(1) recurrent update — what makes the
+``long_500k`` cells runnable for the ssm/hybrid archs while full-attention
+archs are skipped.
+
+Structure per block (faithful to the reference implementation, biases
+omitted — noted in DESIGN.md):
+  in_proj -> [z | xBC | dt], causal depthwise conv(width w) on xBC, silu,
+  SSD over heads (A scalar/head, B/C grouped), +D skip, gate by silu(z),
+  RMSNorm, out_proj.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import Params, dense_init, rmsnorm
+from repro.sharding.ctx import shard_hint
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# SSD core
+# --------------------------------------------------------------------------
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """[..., Q] -> [..., Q, Q]: sum_{k=j+1..i} x_k for i >= j, -inf above diag."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.arange(q)[:, None] >= jnp.arange(q)[None, :]
+    return jnp.where(mask, d, NEG_INF)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,    # [B, S, H, P]   (pre-multiplied by dt)
+    da: jnp.ndarray,   # [B, S, H]      (dt * A, negative)
+    b_: jnp.ndarray,   # [B, S, G, N]
+    c_: jnp.ndarray,   # [B, S, G, N]
+    chunk: int,
+    h0: jnp.ndarray | None = None,  # [B, H, P, N] initial state
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD; returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    bsz, s_orig, h, p = x.shape
+    g, n = b_.shape[2], b_.shape[3]
+    q = min(chunk, s_orig)
+    if s_orig % q != 0:
+        # pad to a chunk multiple: dt=0 at padding -> decay exp(0)=1 and zero
+        # state contribution, so the final state is untouched by pad tokens
+        pad = q - s_orig % q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        da = jnp.pad(da, ((0, 0), (0, pad), (0, 0)))
+        b_ = jnp.pad(b_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_ = jnp.pad(c_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s = x.shape[1]
+    nc = s // q
+    rep = h // g  # heads per group
+
+    xc = x.reshape(bsz, nc, q, h, p)
+    dac = da.reshape(bsz, nc, q, h).transpose(0, 3, 1, 2)       # [B, H, nc, Q]
+    bc = b_.reshape(bsz, nc, q, g, n)
+    cc = c_.reshape(bsz, nc, q, g, n)
+    bh = jnp.repeat(bc, rep, axis=3)                             # [B,nc,Q,H,N]
+    ch = jnp.repeat(cc, rep, axis=3)
+
+    da_cum = jnp.cumsum(dac, axis=-1)                            # [B,H,nc,Q]
+    # ---- intra-chunk (quadratic in Q — matmul form; Pallas target) -----
+    ell = jnp.exp(_segsum(dac.astype(jnp.float32)))              # [B,H,nc,Q,Q]
+    cb = jnp.einsum("bclhn,bcshn->bhcls", ch, bh)                # [B,H,nc,Q,Q]
+    y_diag = jnp.einsum(
+        "bhcls,bhcls,bcshp->bclhp", cb.astype(jnp.float32), ell, xc.astype(jnp.float32)
+    )
+
+    # ---- chunk states ---------------------------------------------------
+    decay_states = jnp.exp(da_cum[..., -1:] - da_cum)            # [B,H,nc,Q]
+    states = jnp.einsum(
+        "bcshn,bhcs,bcshp->bchpn",
+        bh.astype(jnp.float32),
+        decay_states,
+        xc.astype(jnp.float32),
+    )                                                            # [B,nc,H,P,N]
+
+    # ---- inter-chunk recurrence (sequential scan over chunks) -----------
+    total_decay = jnp.exp(da_cum[..., -1])                       # [B,H,nc]
+    init = (
+        jnp.zeros((bsz, h, p, n), jnp.float32)
+        if h0 is None
+        else h0.astype(jnp.float32)
+    )
+
+    def step(carry, inp):
+        st, dec = inp                                            # [B,H,P,N], [B,H]
+        new = carry * dec[..., None, None] + st
+        return new, carry                                        # emit state *entering* chunk
+
+    final, states_in = jax.lax.scan(
+        step,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), total_decay.transpose(2, 0, 1)),
+    )
+    states_in = states_in.transpose(1, 0, 2, 3, 4)               # [B,nc,H,P,N]
+
+    # ---- inter-chunk output ---------------------------------------------
+    out_decay = jnp.exp(da_cum)                                  # [B,H,nc,Q]
+    y_off = jnp.einsum(
+        "bclhn,bchpn,bhcl->bclhp", ch.astype(jnp.float32), states_in, out_decay
+    )
+    y = (y_diag + y_off).reshape(bsz, s, h, p)[:, :s_orig]
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(
+    state: jnp.ndarray,  # [B, H, P, N] fp32
+    x: jnp.ndarray,      # [B, H, P]   (pre-multiplied by dt)
+    da: jnp.ndarray,     # [B, H]      (dt * A)
+    b_: jnp.ndarray,     # [B, G, N]
+    c_: jnp.ndarray,     # [B, G, N]
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """O(1) recurrent update; returns (y [B,H,P], new_state)."""
+    h = x.shape[1]
+    g = b_.shape[1]
+    rep = h // g
+    bh = jnp.repeat(b_, rep, axis=1).astype(jnp.float32)  # [B,H,N]
+    ch = jnp.repeat(c_, rep, axis=1).astype(jnp.float32)
+    new = state * jnp.exp(da.astype(jnp.float32))[..., None, None] + jnp.einsum(
+        "bhp,bhn->bhpn", x.astype(jnp.float32), bh
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", new, ch)
+    return y.astype(x.dtype), new
+
+
+# --------------------------------------------------------------------------
+# Mamba-2 block
+# --------------------------------------------------------------------------
+def init_mamba_block(key, cfg: ModelConfig, dtype) -> Params:
+    d, din = cfg.d_model, cfg.d_inner
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.n_ssm_heads
+    conv_ch = din + 2 * g * n
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * din + 2 * g * n + h), dtype),
+        "conv_w": dense_init(ks[1], (cfg.conv_width, conv_ch), dtype, fan_in=cfg.conv_width),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "gate_norm": jnp.ones((din,), jnp.float32),
+        "out_proj": dense_init(ks[2], (din, d), dtype, fan_in=din),
+    }
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, cache: jnp.ndarray | None):
+    """Depthwise causal conv1d.  xbc [B,S,C], w [W,C]; cache [B,W-1,C] for
+    decode (returns updated cache)."""
+    width = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[2]), xbc.dtype)
+        full = jnp.concatenate([pad, xbc], axis=1)
+        new_cache = None
+    else:
+        full = jnp.concatenate([cache.astype(xbc.dtype), xbc], axis=1)
+        new_cache = full[:, -(width - 1) :]
+    out = sum(
+        full[:, i : i + xbc.shape[1]] * w[i].astype(xbc.dtype) for i in range(width)
+    )
+    return jax.nn.silu(out), new_cache
+
+
+def _split_in_proj(cfg: ModelConfig, zxbcdt: jnp.ndarray):
+    din, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.n_ssm_heads
+    z, xbc, dt = jnp.split(zxbcdt, [din, 2 * din + 2 * g * n], axis=-1)
+    return z, xbc, dt
+
+
+def mamba_block_apply(
+    p: Params, cfg: ModelConfig, u: jnp.ndarray, state: dict | None = None
+):
+    """u [B,S,D] -> y [B,S,D].  With ``state`` (dict: ssm [B,H,P,N] fp32,
+    conv [B,W-1,C]) runs in decode mode (S==1) and returns (y, new_state);
+    otherwise returns (y, final_state_dict)."""
+    din, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.n_ssm_heads
+    pdim = cfg.ssm_head_dim
+    dt_ = u.dtype
+
+    zxbcdt = u @ p["in_proj"].astype(dt_)
+    z, xbc, dtv = _split_in_proj(cfg, zxbcdt)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], None if state is None else state["conv"])
+    x, b_, c_ = jnp.split(xbc, [din, din + g * n], axis=-1)
+    x = shard_hint(x.reshape(*x.shape[:-1], h, pdim), "act_bshp")
+    b_ = b_.reshape(*b_.shape[:-1], g, n)
+    c_ = c_.reshape(*c_.shape[:-1], g, n)
+    dtv = jax.nn.softplus(dtv.astype(jnp.float32) + p["dt_bias"])   # [B,S,H]
+    a = -jnp.exp(p["a_log"])                                        # [H]
+    xdt = x * dtv[..., None].astype(dt_)
+    da = dtv * a
+
+    if state is None:
+        y, final = ssd_chunked(xdt, da, b_, c_, cfg.ssm_chunk)
+        new_state = {"ssm": final, "conv": None}
+    else:
+        y1, new_ssm = ssd_decode_step(
+            state["ssm"], xdt[:, 0], da[:, 0], b_[:, 0], c_[:, 0]
+        )
+        y = y1[:, None]
+        new_state = {"ssm": new_ssm, "conv": new_conv}
+
+    y = y + x * p["d_skip"][:, None].astype(dt_)
+    y = y.reshape(*y.shape[:-2], din)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, p["gate_norm"], cfg.norm_eps)
+    return y @ p["out_proj"].astype(dt_), new_state
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int) -> dict:
+    """Decode-time recurrent state for ONE block (stacked by the caller)."""
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "ssm": jnp.zeros(
+            (batch, cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+        ),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch), jnp.bfloat16),
+    }

@@ -1,0 +1,8 @@
+from repro.optim.adamw import AdamWConfig, adamw_update, global_norm, init_opt_state  # noqa: F401
+from repro.optim.compression import (  # noqa: F401
+    compress_with_feedback,
+    decompress,
+    init_error_state,
+)
+from repro.optim.quant import QTensor, dequantize, quantize  # noqa: F401
+from repro.optim.schedule import constant, warmup_cosine  # noqa: F401

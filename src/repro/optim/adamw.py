@@ -1,0 +1,98 @@
+"""AdamW with optional int8 moments (no optax dependency).
+
+The optimizer state mirrors the parameter pytree, so it inherits the
+parameter PartitionSpecs — FSDP over `data` shards the moments with the
+weights (ZeRO).  ``moment_dtype='int8'`` swaps both moments for block-
+quantized ``QTensor``s (2.06 bytes/param instead of 8), requantized every
+step; the quantization error is unbiased at the block level and measured
+against fp32 Adam in tests/test_optim.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.quant import QTensor, dequantize, quantize
+
+__all__ = ["AdamWConfig", "init_opt_state", "adamw_update", "global_norm"]
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: Callable[[jnp.ndarray], jnp.ndarray] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"   # float32 | bfloat16 | int8
+
+    def lr_at(self, step) -> jnp.ndarray:
+        if callable(self.lr):
+            return self.lr(step)
+        return jnp.asarray(self.lr, jnp.float32)
+
+
+def _zeros_moment(p: jnp.ndarray, kind: str):
+    if kind == "int8":
+        return quantize(jnp.zeros(p.shape, jnp.float32), pow=4)
+    return jnp.zeros(p.shape, jnp.dtype(kind))
+
+
+def init_opt_state(params: Any, cfg: AdamWConfig) -> dict:
+    return {
+        "m": jax.tree.map(lambda p: _zeros_moment(p, cfg.moment_dtype), params,
+                          is_leaf=lambda x: isinstance(x, QTensor)),
+        "v": jax.tree.map(lambda p: _zeros_moment(p, cfg.moment_dtype), params,
+                          is_leaf=lambda x: isinstance(x, QTensor)),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(
+    params: Any, grads: Any, state: dict, cfg: AdamWConfig
+) -> tuple[Any, dict, dict]:
+    """One AdamW step; returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = cfg.lr_at(step)
+    gn = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-12))
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    is_q = lambda x: isinstance(x, QTensor)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        mf = dequantize(m) if is_q(m) else m.astype(jnp.float32)
+        vf = dequantize(v) if is_q(v) else v.astype(jnp.float32)
+        mf = cfg.b1 * mf + (1 - cfg.b1) * g
+        vf = cfg.b2 * vf + (1 - cfg.b2) * g * g
+        mhat = mf / b1c
+        vhat = vf / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        if is_q(m):
+            return new_p, quantize(mf, pow=4), quantize(vf, pow=4)
+        return new_p, mf.astype(m.dtype), vf.astype(v.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"], is_leaf=is_q)
+    flat_v = jax.tree.leaves(state["v"], is_leaf=is_q)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    return new_params, new_state, {"grad_norm": gn, "lr": lr}

@@ -1,0 +1,49 @@
+"""Gradient-message compression with error feedback.
+
+Distributed-optimization trick for the DP all-reduce: quantize the gradient
+message to int8 before the collective and carry the quantization residual
+into the next step (error feedback keeps the *accumulated* update unbiased,
+so convergence matches fp32 aggregation asymptotically — verified on the
+quickstart model in tests).
+
+In the SPMD train step this wraps the explicit gradient aggregation used by
+the coded-DP path; with plain pjit DP the all-reduce is XLA-inserted and
+compression applies at the pod boundary (cross-pod reduce in the launcher).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.quant import QTensor, dequantize, quantize
+
+__all__ = ["init_error_state", "compress_with_feedback", "decompress"]
+
+
+def init_error_state(grads_template: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_template)
+
+
+def compress_with_feedback(grads: Any, err: Any) -> tuple[Any, Any]:
+    """Returns (quantized message tree, new error state)."""
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q = quantize(corrected)
+        new_e = corrected - dequantize(q)
+        return q, new_e
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err)
+    pairs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    msgs = jax.tree.unflatten(treedef, [p[0] for p in pairs])
+    new_err = jax.tree.unflatten(treedef, [p[1] for p in pairs])
+    return msgs, new_err
+
+
+def decompress(msgs: Any) -> Any:
+    return jax.tree.map(
+        lambda q: dequantize(q), msgs, is_leaf=lambda x: isinstance(x, QTensor)
+    )

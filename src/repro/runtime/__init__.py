@@ -1,0 +1,8 @@
+from repro.runtime.checkpoint import (  # noqa: F401
+    gc_checkpoints,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.runtime.health import HealthMonitor  # noqa: F401
+from repro.runtime.elastic import plan_mesh_shape, reshard  # noqa: F401

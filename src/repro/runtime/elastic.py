@@ -1,0 +1,69 @@
+"""Elastic re-meshing: shrink/grow the device mesh and reshard state.
+
+Node-failure protocol (launcher-level):
+
+  1. failure detected (collective timeout / health monitor) -> drop dead
+     hosts from the device list,
+  2. ``plan_mesh_shape`` picks the largest (data, model) grid that fits the
+     survivors while keeping the TP axis intact (TP holds *sharded layer
+     state*; shrinking DP only changes the batch math),
+  3. ``reshard`` device_puts the restored checkpoint onto the new mesh
+     (restore-with-resharding path of ``repro.runtime.checkpoint``),
+  4. the data pipeline rescales: same global batch, fewer DP shards.
+
+The CPU container demonstrates the full protocol with forced host counts in
+tests/test_runtime.py.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+__all__ = ["plan_mesh_shape", "make_mesh_from_devices", "reshard", "shrink_mesh"]
+
+
+def plan_mesh_shape(n_devices: int, model: int = 16, pod: int | None = None):
+    """Largest (data, model) (or (pod, data, model)) grid fitting n_devices.
+
+    TP width is preserved; leftover devices idle (a real deployment drains
+    them).  Returns (shape tuple, axis names tuple)."""
+    if n_devices < model:
+        # degrade TP last — halve until it fits (weights must still fit HBM;
+        # the caller should re-check memory_analysis after a TP shrink)
+        while model > 1 and n_devices < model:
+            model //= 2
+    if pod:
+        data = n_devices // (model * pod)
+        if data < 1:
+            raise ValueError("not enough devices for the requested pod count")
+        return (pod, data, model), ("pod", "data", "model")
+    data = n_devices // model
+    if data < 1:
+        raise ValueError("not enough devices")
+    return (data, model), ("data", "model")
+
+
+def make_mesh_from_devices(devices, shape, axes) -> Mesh:
+    n = int(np.prod(shape))
+    dev = np.asarray(devices[:n]).reshape(shape)
+    return Mesh(dev, axes)
+
+
+def shrink_mesh(mesh: Mesh, dead: set[int]) -> Mesh:
+    """New mesh from the survivors of ``mesh`` (drops whole DP slices)."""
+    alive = [d for d in mesh.devices.flat if d.id not in dead]
+    model = mesh.shape.get("model", 1)
+    pod = mesh.shape.get("pod", None)
+    shape, axes = plan_mesh_shape(len(alive), model=model, pod=None if pod is None else pod)
+    return make_mesh_from_devices(alive, shape, axes)
+
+
+def reshard(tree: Any, mesh: Mesh, specs: Any) -> Any:
+    """device_put every leaf onto (mesh, spec) — move state to a new mesh."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), tree, specs
+    )

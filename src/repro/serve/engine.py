@@ -1,0 +1,162 @@
+"""Batched serving engine with continuous batching + BPCC coded head.
+
+Slot-based continuous batching: a fixed decode batch of ``n_slots``
+sequences; finished slots are immediately refilled by prefilling the next
+queued request into the slot (per-slot cache insertion on the batch axis).
+Greedy sampling.
+
+BPCC integration (the paper's technique on the serving hot path):
+
+  * when ``cfg.coded`` is set, the LM-head matvec — the single largest
+    decode-time matrix–vector product — runs through the block-coded
+    CodedLinear: any ``coded_parity`` model-shards may be erased (straggling
+    / dead) and the logits remain exact;
+  * the per-step erasure mask comes from a pluggable ``mask_fn`` — wire it
+    to ``repro.runtime.health.HealthMonitor.straggler_mask`` to drop shards
+    the monitor flags, without stalling the batch (the paper's "don't wait
+    for stragglers", bulk-synchronous flavour).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import Model
+
+__all__ = ["Request", "ServeEngine"]
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray               # [S] int32
+    max_new_tokens: int = 16
+    img_embed: np.ndarray | None = None
+    out_tokens: list[int] = field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.out_tokens) >= self.max_new_tokens
+
+
+def _batch_axis(path) -> int | None:
+    """Batch-dim index per cache leaf name (mirrors the cache layouts)."""
+    name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+    if name == "pos":
+        return 0
+    if name in ("k", "v", "ck", "cv"):
+        return -4
+    if name == "ssm":
+        return -4
+    if name == "conv":
+        return -3
+    return None
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        model: Model,
+        params: Any,
+        n_slots: int = 4,
+        s_max: int = 256,
+        mask_fn: Callable[[], np.ndarray] | None = None,
+        eos_token: int | None = None,
+    ):
+        self.model, self.params = model, params
+        self.n_slots, self.s_max = n_slots, s_max
+        self.mask_fn = mask_fn
+        self.eos_token = eos_token
+        self.queue: deque[Request] = deque()
+        self.slots: list[Request | None] = [None] * n_slots
+        self.cache = model.init_cache(n_slots, s_max)
+        self._last_tok = np.zeros(n_slots, np.int32)
+        self._active = np.zeros(n_slots, bool)
+        self._decode = jax.jit(model.decode_step)
+        self._prefill1 = jax.jit(
+            lambda p, b: model.prefill(p, b, s_max=s_max), static_argnums=()
+        )
+        self.completed: list[Request] = []
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _insert_slot(self, slot: int, req: Request) -> None:
+        """Prefill one request (B=1) and splice its cache into the batch."""
+        batch = {"tokens": jnp.asarray(req.prompt[None])}
+        if req.img_embed is not None:
+            batch["img_embed"] = jnp.asarray(req.img_embed[None])
+        if self.model.cfg.family == "encdec":
+            batch["frames"] = jnp.asarray(
+                np.zeros((1, len(req.prompt), self.model.cfg.d_model), np.float32)
+            )
+        logits, cache1 = self._prefill1(self.params, batch)
+
+        def splice(path, full, one):
+            ax = _batch_axis(path)
+            if ax is None:
+                return full
+            ax = ax % full.ndim
+            idx = [slice(None)] * full.ndim
+            idx[ax] = slot
+            one_ax = ax if ax < one.ndim else one.ndim - 1
+            src = jnp.take(one, 0, axis=one_ax)
+            # pad/crop the sequence axis of k/v to the batch cache capacity
+            if src.shape != full[tuple(idx)].shape:
+                tgt = full[tuple(idx)].shape
+                pads = [(0, t - s) for s, t in zip(src.shape, tgt)]
+                src = jnp.pad(src, pads)
+            return full.at[tuple(idx)].set(src.astype(full.dtype))
+
+        self.cache = jax.tree_util.tree_map_with_path(splice, self.cache, cache1)
+        tok = int(np.argmax(np.asarray(logits)[0]))
+        req.out_tokens.append(tok)
+        self._last_tok[slot] = tok
+        self.slots[slot] = req
+        self._active[slot] = True
+
+    def _refill(self) -> None:
+        for s in range(self.n_slots):
+            if not self._active[s] and self.queue:
+                self._insert_slot(s, self.queue.popleft())
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """One batched decode step; returns number of active sequences."""
+        self._refill()
+        if not self._active.any():
+            return 0
+        mask = None
+        if self.mask_fn is not None and self.model.cfg.coded:
+            mask = jnp.asarray(self.mask_fn(), jnp.float32)
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self._last_tok), mask
+        )
+        toks = np.argmax(np.asarray(logits), axis=-1).astype(np.int32)
+        for s in range(self.n_slots):
+            if not self._active[s]:
+                continue
+            req = self.slots[s]
+            tok = int(toks[s])
+            req.out_tokens.append(tok)
+            self._last_tok[s] = tok
+            hit_eos = self.eos_token is not None and tok == self.eos_token
+            if req.done or hit_eos:
+                self.completed.append(req)
+                self._active[s] = False
+                self.slots[s] = None
+        return int(self._active.sum())
+
+    def run(self, max_steps: int = 10_000) -> list[Request]:
+        """Drain the queue; returns completed requests."""
+        for _ in range(max_steps):
+            if self.step() == 0 and not self.queue:
+                break
+        return self.completed

@@ -1,0 +1,6 @@
+from repro.sharding.ctx import shard_hint, sharding_hints, current_hints  # noqa: F401
+from repro.sharding.policy import (  # noqa: F401
+    ShardingPolicy,
+    make_policy,
+    param_specs,
+)

@@ -1,0 +1,39 @@
+"""Activation-sharding hints as a context, keeping model code mesh-agnostic.
+
+Model code calls ``shard_hint(x, "act_btd")``; the launcher installs a dict
+of logical-name -> PartitionSpec via ``sharding_hints(...)``.  Outside the
+context (unit tests, single-device smoke runs) every hint is a no-op, so
+the same model code runs anywhere.
+"""
+from __future__ import annotations
+
+import contextlib
+from contextvars import ContextVar
+
+import jax
+
+_HINTS: ContextVar[dict | None] = ContextVar("sharding_hints", default=None)
+
+
+def current_hints() -> dict | None:
+    return _HINTS.get()
+
+
+@contextlib.contextmanager
+def sharding_hints(hints: dict):
+    token = _HINTS.set(hints)
+    try:
+        yield
+    finally:
+        _HINTS.reset(token)
+
+
+def shard_hint(x: jax.Array, name: str) -> jax.Array:
+    """Constrain ``x`` to the installed spec for ``name`` (no-op if unset)."""
+    hints = _HINTS.get()
+    if not hints:
+        return x
+    spec = hints.get(name)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,25 @@
+"""Deterministic PRNG helpers shared across the framework.
+
+Everything that samples (load scenarios, LT degree tables, synthetic data,
+simulated completion times) threads an explicit seed through numpy's
+``Generator`` or ``jax.random`` keys so that every experiment in
+EXPERIMENTS.md is exactly reproducible.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def rng(seed: int) -> np.random.Generator:
+    """A process-independent numpy Generator (PCG64)."""
+    return np.random.Generator(np.random.PCG64(seed))
+
+
+def derive(seed: int, *tags: int | str) -> int:
+    """Derive a child seed from (seed, tags) — stable across runs/platforms."""
+    h = int(seed)
+    for t in tags:
+        if isinstance(t, str):
+            t = sum((i + 1) * b for i, b in enumerate(t.encode()))
+        h = (h * 6364136223846793005 + int(t) * 2 + 1) % (1 << 64)
+    return int(h % (2**31 - 1))

@@ -1,0 +1,10 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS device forcing here — smoke tests
+and benches must see the real (single) device; only launch/dryrun.py forces
+512 placeholder devices, in its own process."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,77 @@
+"""Thread-based cluster emulator (paper §5 EC2 experiments, locally)."""
+import numpy as np
+import pytest
+
+from repro.cluster import ClusterEmulator, StragglerPolicy, ec2_scenario
+from repro.core.distributions import estimate_parameters
+
+
+@pytest.fixture(scope="module")
+def small_task():
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((400, 64)).astype(np.float32)
+    x = rng.standard_normal(64).astype(np.float32)
+    return a, x
+
+
+@pytest.mark.parametrize("scheme", ["uniform", "load_balanced", "hcmm", "bpcc"])
+@pytest.mark.parametrize("code", ["lt", "gaussian"])
+def test_emulator_correct_result(small_task, scheme, code):
+    a, x = small_task
+    _, workers = ec2_scenario(1)
+    em = ClusterEmulator(workers, time_scale=0.5, seed=1)
+    res = em.run_task(a, x, scheme, code=code)
+    assert res.ok
+    ref = a @ x
+    # LT peeling is exact; Gaussian LS from a minimal received subset can be
+    # ill-conditioned, so its tolerance is looser
+    tol = 2e-3 if code == "gaussian" else 1e-4
+    assert np.abs(res.y - ref).max() / np.abs(ref).max() < tol
+    assert res.t_complete > 0
+
+
+def test_emulator_bpcc_streams_early(small_task):
+    a, x = small_task
+    _, workers = ec2_scenario(1)
+    em = ClusterEmulator(workers, time_scale=0.5, seed=2)
+    res_b = em.run_task(a, x, "bpcc")
+    res_h = em.run_task(a, x, "hcmm")
+    first_b = min(t for t, _, _ in res_b.arrivals)
+    first_h = min(t for t, _, _ in res_h.arrivals)
+    assert first_b < first_h  # partial results arrive earlier under BPCC
+
+
+def test_emulator_straggler_policy(small_task):
+    a, x = small_task
+    _, workers = ec2_scenario(1)
+    em0 = ClusterEmulator(workers, time_scale=0.5, seed=3)
+    em1 = ClusterEmulator(
+        workers, time_scale=0.5, seed=3, straggler=StragglerPolicy(prob=1.0)
+    )
+    t0 = em0.run_task(a, x, "uniform").t_complete
+    t1 = em1.run_task(a, x, "uniform").t_complete
+    assert t1 == pytest.approx(3 * t0, rel=0.05)  # 3x observed slowdown
+
+
+def test_emulator_rows_by_time(small_task):
+    a, x = small_task
+    _, workers = ec2_scenario(1)
+    em = ClusterEmulator(workers, time_scale=0.5, seed=4)
+    res = em.run_task(a, x, "bpcc")
+    grid = np.linspace(0, res.t_complete, 10)
+    s = res.rows_by_time(grid)
+    assert (np.diff(s) >= 0).all()
+    assert s[-1] == res.rows_received
+
+
+def test_parameter_estimation_from_emulator():
+    """§5.2 round trip: measure an emulated instance, recover its params."""
+    _, workers = ec2_scenario(1)
+    w = workers[0].model
+    rows = 500.0
+    times = np.array(
+        [w.batch_arrival_times(np.array([rows]), seed=i)[0] for i in range(800)]
+    )
+    est = estimate_parameters(times, rows)
+    assert est.alpha == pytest.approx(w.alpha, rel=0.1)
+    assert est.mu == pytest.approx(w.mu, rel=0.3)

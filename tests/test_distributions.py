@@ -1,0 +1,57 @@
+"""Shifted-exponential model (paper Eq. 3 / Eq. 21 / §5.2 estimation)."""
+import numpy as np
+import pytest
+
+from repro.core.distributions import (
+    ShiftedExp,
+    estimate_parameters,
+    sample_heterogeneous_cluster,
+)
+
+
+def test_cdf_properties():
+    w = ShiftedExp(mu=10.0, alpha=0.05)
+    rows = 100.0
+    assert w.cdf(rows * w.alpha - 1e-9, rows) == 0.0
+    assert w.cdf(1e9, rows) == pytest.approx(1.0)
+    t = np.linspace(0, 100, 500)
+    c = w.cdf(t, rows)
+    assert (np.diff(c) >= -1e-12).all()  # monotone
+
+
+def test_mean_and_quantile():
+    w = ShiftedExp(mu=4.0, alpha=0.1)
+    rows = 50.0
+    assert w.mean_time(rows) == pytest.approx(rows * (0.1 + 0.25))
+    for p in (0.1, 0.5, 0.9):
+        t = w.quantile(p, rows)
+        assert w.cdf(t, rows) == pytest.approx(p, abs=1e-9)
+
+
+def test_sampling_matches_model():
+    w = ShiftedExp(mu=8.0, alpha=0.02)
+    rows = 200.0
+    times = np.array(
+        [w.batch_arrival_times(np.array([rows]), seed=i)[0] for i in range(4000)]
+    )
+    assert times.min() >= rows * w.alpha - 1e-9
+    assert times.mean() == pytest.approx(w.mean_time(rows), rel=0.05)
+
+
+def test_parameter_estimation_recovers():
+    """§5.2: t0 -> alpha; exponential tail MLE -> mu."""
+    true = ShiftedExp(mu=12.0, alpha=0.03)
+    rows = 150.0
+    times = np.array(
+        [true.batch_arrival_times(np.array([rows]), seed=i)[0] for i in range(3000)]
+    )
+    est = estimate_parameters(times, rows)
+    assert est.alpha == pytest.approx(true.alpha, rel=0.05)
+    assert est.mu == pytest.approx(true.mu, rel=0.15)
+
+
+def test_cluster_sampler_ranges():
+    ws = sample_heterogeneous_cluster(50, seed=3)
+    for w in ws:
+        assert 1.0 <= w.mu <= 50.0
+        assert w.alpha == pytest.approx(1.0 / w.mu)

@@ -1,0 +1,120 @@
+"""Erasure codes: LT (robust soliton + peeling) and Gaussian (LS/masked)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.decoding import (
+    ls_decode,
+    masked_pinv_decode,
+    peel_decode_jax,
+    peel_decode_np,
+    peel_decode_plan,
+)
+from repro.core.encoding import (
+    GaussianCode,
+    LTCode,
+    encode_matrix,
+    required_rows,
+    robust_soliton,
+)
+
+
+def test_robust_soliton_pmf():
+    for r in (2, 10, 100, 1000):
+        pmf = robust_soliton(r)
+        assert pmf.shape == (r,)
+        assert pmf.sum() == pytest.approx(1.0)
+        assert (pmf >= 0).all()
+
+
+def test_lt_plan_structure():
+    plan = LTCode(r=40, seed=0).plan(70)
+    assert plan.q == 70
+    assert (plan.degrees >= 1).all()
+    # systematic prefix: first r rows are identity
+    g = plan.dense_generator()
+    assert np.allclose(g[:40], np.eye(40))
+
+
+def test_lt_roundtrip_all_received():
+    r, m = 60, 17
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((r, m)).astype(np.float32)
+    plan = LTCode(r=r, seed=1).plan(required_rows(r, "lt"))
+    coded = encode_matrix(a, plan)
+    y, ok, nrec = peel_decode_np(coded, plan.indices, plan.coeffs, r)
+    assert ok and nrec == r
+    assert np.allclose(y, a, atol=1e-5)
+
+
+def test_lt_roundtrip_with_erasures():
+    """Recovery from a random r(1+eps) subset, systematic rows missing."""
+    r = 100
+    rng = np.random.default_rng(2)
+    a = rng.standard_normal((r, 5)).astype(np.float64)
+    plan = LTCode(r=r, seed=3).plan(int(r * 1.8))
+    coded = encode_matrix(a, plan)
+    received = np.zeros(plan.q, bool)
+    # drop 30% of systematic rows, keep enough coded rows
+    keep = rng.random(plan.q) > 0.3
+    received[keep] = True
+    if received.sum() < required_rows(r, "lt"):
+        received[:] = True
+    y, ok, nrec = peel_decode_plan(coded, plan, received)
+    if ok:  # peeling can fail w.p. ~delta; only check correctness when ok
+        assert np.allclose(y, a, atol=1e-6)
+    assert nrec >= r * 0.5  # should make real progress regardless
+
+
+def test_peel_decode_jax_matches_np():
+    r = 24
+    rng = np.random.default_rng(4)
+    a = rng.standard_normal((r, 3)).astype(np.float32)
+    plan = LTCode(r=r, seed=5).plan(40)
+    coded = encode_matrix(a, plan)
+    g = plan.dense_generator()
+    y_jax, known = peel_decode_jax(jnp.asarray(coded), jnp.asarray(g), r)
+    y_np, ok, _ = peel_decode_np(coded, plan.indices, plan.coeffs, r)
+    if ok:
+        assert bool(known.all())
+        assert np.allclose(np.asarray(y_jax), y_np, atol=1e-4)
+
+
+def test_gaussian_ls_decode():
+    r, m = 32, 9
+    rng = np.random.default_rng(6)
+    a = rng.standard_normal((r, m)).astype(np.float32)
+    plan = GaussianCode(r=r, seed=7).plan(48)
+    coded = encode_matrix(a, plan)
+    g = plan.dense_generator()
+    keep = rng.permutation(48)[:r + 4]
+    y = ls_decode(jnp.asarray(g[keep]), jnp.asarray(coded[keep]))
+    assert np.allclose(np.asarray(y), a, atol=2e-2)
+
+
+def test_masked_pinv_decode():
+    r = 20
+    rng = np.random.default_rng(8)
+    a = rng.standard_normal((r, 4)).astype(np.float32)
+    plan = GaussianCode(r=r, seed=9).plan(30)
+    coded = encode_matrix(a, plan)
+    g = plan.dense_generator()
+    mask = np.ones(30, np.float32)
+    mask[rng.permutation(30)[:8]] = 0.0   # erase 8 of 30 (22 >= 20 survive)
+    coded_garbage = coded.copy()
+    coded_garbage[mask == 0] = 1e6        # stragglers return garbage
+    y = masked_pinv_decode(jnp.asarray(g), jnp.asarray(coded_garbage), jnp.asarray(mask))
+    assert np.allclose(np.asarray(y), a, atol=5e-2)
+
+
+@settings(max_examples=15, deadline=None)
+@given(r=st.integers(8, 80), seed=st.integers(0, 100))
+def test_lt_decode_property(r, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((r, 3))
+    plan = LTCode(r=r, seed=seed).plan(required_rows(r, "lt") + 8)
+    coded = encode_matrix(a, plan)
+    y, ok, _ = peel_decode_np(coded, plan.indices, plan.coeffs, r)
+    assert ok  # all rows received + systematic prefix => always decodable
+    assert np.allclose(y, a, atol=1e-6)

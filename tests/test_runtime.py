@@ -1,0 +1,116 @@
+"""Fault-tolerance runtime: checkpoints, health estimation, elastic mesh."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.distributions import ShiftedExp
+from repro.runtime import (
+    HealthMonitor,
+    gc_checkpoints,
+    latest_step,
+    plan_mesh_shape,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.runtime.checkpoint import wait_for_saves
+from repro.runtime.elastic import make_mesh_from_devices, reshard
+from repro.sharding.policy import make_policy
+
+
+@pytest.fixture
+def tree():
+    return {
+        "a": jnp.arange(12.0).reshape(3, 4),
+        "b": {"c": jnp.ones((5,), jnp.int32), "d": jnp.zeros((2, 2), jnp.bfloat16)},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path, tree):
+    save_checkpoint(str(tmp_path), 7, tree)
+    step, restored = restore_checkpoint(str(tmp_path), tree)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert np.array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_checkpoint_latest_and_gc(tmp_path, tree):
+    for s in (5, 10, 15, 20):
+        save_checkpoint(str(tmp_path), s, tree)
+    assert latest_step(str(tmp_path)) == 20
+    dropped = gc_checkpoints(str(tmp_path), keep=2)
+    assert dropped == [5, 10]
+    assert latest_step(str(tmp_path)) == 20
+
+
+def test_checkpoint_atomicity(tmp_path, tree):
+    """A stale .tmp dir (simulated crash) is never picked up on restore."""
+    save_checkpoint(str(tmp_path), 3, tree)
+    os.makedirs(tmp_path / ".tmp-9" )
+    (tmp_path / ".tmp-9" / "leaf-00000.npy").write_bytes(b"garbage")
+    assert latest_step(str(tmp_path)) == 3
+    step, _ = restore_checkpoint(str(tmp_path), tree)
+    assert step == 3
+
+
+def test_checkpoint_async(tmp_path, tree):
+    save_checkpoint(str(tmp_path), 42, tree, blocking=False)
+    wait_for_saves()
+    assert latest_step(str(tmp_path)) == 42
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path, tree):
+    save_checkpoint(str(tmp_path), 1, tree)
+    bad = dict(tree)
+    bad["a"] = jnp.zeros((4, 4))
+    with pytest.raises(ValueError):
+        restore_checkpoint(str(tmp_path), bad)
+
+
+def test_health_monitor_estimates():
+    true = ShiftedExp(mu=20.0, alpha=0.01)
+    hm = HealthMonitor(n_workers=3, window=512)
+    for i in range(400):
+        t = true.batch_arrival_times(np.array([100.0]), seed=i)[0]
+        hm.record(0, rows=100.0, seconds=t)
+    est = hm.estimate(0)
+    assert est.alpha == pytest.approx(true.alpha, rel=0.15)
+    assert est.mu == pytest.approx(true.mu, rel=0.4)
+    # worker 1 has no data -> prior
+    assert hm.estimate(1) == hm.prior
+
+
+def test_health_monitor_reallocation_and_mask():
+    hm = HealthMonitor(n_workers=4, window=64)
+    fast = ShiftedExp(mu=50.0, alpha=0.01)
+    slow = ShiftedExp(mu=50.0, alpha=0.10)
+    for i in range(64):
+        for w, model in enumerate([fast, fast, fast, slow]):
+            hm.record(w, 10.0, model.batch_arrival_times(np.array([10.0]), seed=i * 7 + w)[0])
+    alloc = hm.reallocate(r=1000)
+    assert alloc.loads[3] < alloc.loads[0]  # slow worker gets less load
+    mask = hm.straggler_mask(slowdown=3.0)
+    assert mask[3] == 0.0 and mask[:3].all()
+    w = hm.microbatch_weights()
+    assert w[3] == min(w)
+
+
+def test_plan_mesh_shape():
+    assert plan_mesh_shape(256, model=16) == ((16, 16), ("data", "model"))
+    assert plan_mesh_shape(240, model=16) == ((15, 16), ("data", "model"))
+    assert plan_mesh_shape(512, model=16, pod=2) == ((2, 16, 16), ("pod", "data", "model"))
+    # TP degradation when too few devices
+    shape, _ = plan_mesh_shape(8, model=16)
+    assert shape == (1, 8)
+
+
+def test_reshard_roundtrip_single_device(tree):
+    devs = jax.devices()
+    mesh = make_mesh_from_devices(devs, (1, 1), ("data", "model"))
+    policy = make_policy(mesh)
+    specs = jax.tree.map(lambda x: policy.batch_spec("x", tuple(x.shape)), tree)
+    out = reshard(tree, mesh, specs)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        assert np.array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))

@@ -1,0 +1,75 @@
+"""Event-driven simulator (paper §4) behaviour."""
+import numpy as np
+import pytest
+
+from repro.core.allocation import Allocation, allocate
+from repro.core.distributions import ShiftedExp, sample_heterogeneous_cluster
+from repro.core.simulator import (
+    accumulation_curve,
+    completion_time,
+    sample_rates,
+    simulate_scheme,
+)
+
+WORKERS = sample_heterogeneous_cluster(10, seed=11)
+
+
+def test_completion_time_uncoded_is_max():
+    alloc = Allocation(
+        loads=np.array([10, 20]), batches=np.array([1, 1]), tau=np.nan,
+        scheme="uniform", coded=False,
+    )
+    rates = np.array([1.0, 0.5])
+    assert completion_time(alloc, rates, 30) == pytest.approx(10.0)  # max(10*1, 20*.5)
+
+
+def test_completion_time_coded_event_merge():
+    """2 workers, 2 batches each; need 15 of 20 rows -> third batch event."""
+    alloc = Allocation(
+        loads=np.array([10, 10]), batches=np.array([2, 2]), tau=1.0,
+        scheme="bpcc", coded=True,
+    )
+    rates = np.array([1.0, 2.0])
+    # events: w0 b1@5 (5 rows), w0 b2@10 (5), w1 b1@10 (5), w1 b2@20 (5)
+    assert completion_time(alloc, rates, 15) == pytest.approx(10.0)
+    assert completion_time(alloc, rates, 16) == pytest.approx(20.0)
+
+
+def test_bpcc_beats_hcmm_statistically():
+    a = simulate_scheme("bpcc", 5000, WORKERS, n_trials=200, seed=0)
+    b = simulate_scheme("hcmm", 5000, WORKERS, n_trials=200, seed=0)
+    assert a.mean < b.mean  # Theorem 7, Monte-Carlo
+
+
+def test_stragglers_hurt_uncoded_more():
+    u0 = simulate_scheme("uniform", 5000, WORKERS, n_trials=100, seed=1)
+    u1 = simulate_scheme("uniform", 5000, WORKERS, n_trials=100, seed=1,
+                         straggler_prob=0.3)
+    c1 = simulate_scheme("bpcc", 5000, WORKERS, n_trials=100, seed=1,
+                         straggler_prob=0.3)
+    assert u1.mean > u0.mean           # stragglers slow the uncoded scheme
+    assert c1.mean < u1.mean           # coding mitigates
+
+
+def test_accumulation_curve_monotone_and_capped():
+    alloc = allocate("bpcc", 3000, WORKERS)
+    t = np.linspace(0, alloc.tau * 3, 50)
+    s = accumulation_curve(alloc, WORKERS, t, n_trials=20, seed=2)
+    assert (np.diff(s) >= -1e-9).all()
+    assert s[-1] <= alloc.total_rows + 1e-9
+
+
+def test_bpcc_streams_from_start():
+    """Paper Fig. 6: BPCC accumulates rows well before HCMM's first arrival."""
+    bp = allocate("bpcc", 5000, WORKERS)
+    hc = allocate("hcmm", 5000, WORKERS)
+    t = np.linspace(1e-3, bp.tau * 0.5, 20)
+    s_bp = accumulation_curve(bp, WORKERS, t, n_trials=50, seed=3)
+    s_hc = accumulation_curve(hc, WORKERS, t, n_trials=50, seed=3)
+    assert s_bp[len(t) // 4] > s_hc[len(t) // 4]
+
+
+def test_sample_rates_straggler_multiplier():
+    r0 = sample_rates(WORKERS, seed=5, straggler_prob=0.0)
+    r1 = sample_rates(WORKERS, seed=5, straggler_prob=1.0, straggler_slowdown=3.0)
+    assert np.allclose(r1, r0 * 3.0)

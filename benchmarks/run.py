@@ -17,12 +17,13 @@ def main() -> None:
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import kernels_bench, paper_ec2, paper_sim, roofline_bench
+    from benchmarks import decode_bench, kernels_bench, paper_ec2, paper_sim, roofline_bench
 
     blocks = [
         ("sim", paper_sim.run),        # Figs 1-6 (§4 simulation studies)
         ("ec2", paper_ec2.run),        # Figs 8-11 (§5 EC2 experiments, emulated)
         ("kernels", kernels_bench.run),
+        ("decode", decode_bench.run),  # DecoderCache / fused kernel / MC sweep
         ("roofline", roofline_bench.run),
     ]
     t0 = time.time()

@@ -1,0 +1,11 @@
+"""repro — BPCC coded-computing reproduction (see ROADMAP.md, DESIGN.md).
+
+Importing the package pins ``jax_threefry_partitionable`` on so that every
+``jax.random`` draw is *sharding-invariant*: a parameter initialized under a
+2x2 mesh is bit-identical to the single-device init (required by the elastic
+resharding path and asserted in tests/test_multidevice.py).  This is the
+default in newer JAX; we pin it explicitly for the 0.4.x floor.
+"""
+import jax as _jax
+
+_jax.config.update("jax_threefry_partitionable", True)

@@ -24,6 +24,7 @@ Fig. 1 values are consistent with.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from functools import lru_cache
 
 import numpy as np
 from scipy import optimize, special
@@ -288,10 +289,35 @@ SCHEMES = {
 }
 
 
+@lru_cache(maxsize=1024)
+def _allocate_cached(
+    scheme: str, r: int, workers: tuple[ShiftedExp, ...], pkey
+) -> Allocation:
+    kw = {}
+    if pkey is not None:
+        kw["p"] = np.asarray(pkey, dtype=np.int64) if isinstance(pkey, tuple) else pkey
+    return SCHEMES[scheme](r, list(workers), **kw)
+
+
 def allocate(scheme: str, r: int, workers: list[ShiftedExp], **kw) -> Allocation:
-    """Dispatch by scheme name ('uniform' | 'load_balanced' | 'hcmm' | 'bpcc')."""
-    try:
-        fn = SCHEMES[scheme]
-    except KeyError:
-        raise ValueError(f"unknown scheme {scheme!r}; options {sorted(SCHEMES)}") from None
-    return fn(r, workers, **kw)
+    """Dispatch by scheme name ('uniform' | 'load_balanced' | 'hcmm' | 'bpcc').
+
+    Memoized: allocations are deterministic in (scheme, r, workers, p), and
+    the paper sweeps (benchmarks, Monte-Carlo figures) re-solve the same
+    cells hundreds of times — Algorithm 1's root-finding dominated the
+    vectorized simulator's wall-clock before caching.  ``Allocation`` is a
+    frozen dataclass; treat the returned (shared) instance as read-only.
+    """
+    if scheme not in SCHEMES:
+        raise ValueError(f"unknown scheme {scheme!r}; options {sorted(SCHEMES)}")
+    extra = {k: v for k, v in kw.items() if k != "p"}
+    if extra:  # unknown kwargs: direct uncached call preserves error behavior
+        return SCHEMES[scheme](r, workers, **kw)
+    p = kw.get("p")
+    if isinstance(p, np.ndarray):
+        pkey = tuple(int(x) for x in p.ravel())
+    elif p is None:
+        pkey = None
+    else:
+        pkey = int(p)
+    return _allocate_cached(scheme, int(r), tuple(workers), pkey)

@@ -36,13 +36,31 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = [
     "block_mds_generator",
+    "block_mds_generator_np",
     "CodedLinear",
     "encode_blocks",
     "decode_blocks",
+    "decode_blocks_svd",
     "coded_block_matmul",
     "bpcc_batched_matvec",
     "row_coded_matvec",
 ]
+
+# jax.shard_map landed in newer JAX; 0.4.x keeps it under experimental.
+# With decode_blocks now gather+matmul (no SVD custom-call), the modern
+# varying-axes checker verifies the replicated out_specs itself.  The 0.4.x
+# ``check_rep`` tracker predates that machinery and cannot infer replication
+# even through a bare all_gather, so it is disabled on that version only.
+if hasattr(jax, "shard_map"):
+    def _shard_map(f, mesh, in_specs, out_specs):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+else:
+    from jax.experimental.shard_map import shard_map as _experimental_shard_map
+
+    def _shard_map(f, mesh, in_specs, out_specs):
+        return _experimental_shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+        )
 
 
 # --------------------------------------------------------------------------
@@ -74,6 +92,36 @@ def _worst_erasure_cond(b: np.ndarray, n_parity: int, max_patterns: int = 4096) 
     return worst
 
 
+def block_mds_generator_np(
+    n_blocks: int, n_data: int, n_seeds: int = 32
+) -> np.ndarray:
+    """Host-side (numpy, float64) systematic generator — see block_mds_generator.
+
+    Split out so the DecoderCache can build its pseudo-inverse table without
+    touching jnp (jnp constants created inside a shard_map trace are lifted
+    to tracers, which would poison the host-side float64 precompute).
+    """
+    if n_blocks < n_data:
+        raise ValueError(f"need n_blocks >= n_data, got {n_blocks} < {n_data}")
+    n_parity = n_blocks - n_data
+    eye = np.eye(n_data, dtype=np.float64)
+    if n_parity == 0:
+        return eye
+    key = (n_blocks, n_data)
+    if key not in _GEN_CACHE:
+        best, best_cond = None, np.inf
+        for seed in range(n_seeds):
+            g = np.random.Generator(np.random.PCG64(1234 + seed))
+            parity = g.standard_normal((n_parity, n_data))
+            parity /= np.linalg.norm(parity, axis=1, keepdims=True)
+            b = np.concatenate([eye, parity], axis=0)
+            c = _worst_erasure_cond(b, n_parity)
+            if c < best_cond:
+                best, best_cond = b, c
+        _GEN_CACHE[key] = best
+    return _GEN_CACHE[key]
+
+
 def block_mds_generator(
     n_blocks: int, n_data: int, dtype=jnp.float32, n_seeds: int = 32
 ) -> jnp.ndarray:
@@ -90,25 +138,7 @@ def block_mds_generator(
     number (exhaustive over patterns when feasible); the search result is
     cached for the process lifetime.
     """
-    if n_blocks < n_data:
-        raise ValueError(f"need n_blocks >= n_data, got {n_blocks} < {n_data}")
-    n_parity = n_blocks - n_data
-    eye = np.eye(n_data, dtype=np.float64)
-    if n_parity == 0:
-        return jnp.asarray(eye, dtype=dtype)
-    key = (n_blocks, n_data)
-    if key not in _GEN_CACHE:
-        best, best_cond = None, np.inf
-        for seed in range(n_seeds):
-            g = np.random.Generator(np.random.PCG64(1234 + seed))
-            parity = g.standard_normal((n_parity, n_data))
-            parity /= np.linalg.norm(parity, axis=1, keepdims=True)
-            b = np.concatenate([eye, parity], axis=0)
-            c = _worst_erasure_cond(b, n_parity)
-            if c < best_cond:
-                best, best_cond = b, c
-        _GEN_CACHE[key] = best
-    return jnp.asarray(_GEN_CACHE[key], dtype=dtype)
+    return jnp.asarray(block_mds_generator_np(n_blocks, n_data, n_seeds), dtype=dtype)
 
 
 def encode_blocks(w: jnp.ndarray, n_data: int, n_parity: int) -> jnp.ndarray:
@@ -128,21 +158,19 @@ def encode_blocks(w: jnp.ndarray, n_data: int, n_parity: int) -> jnp.ndarray:
     return coded.reshape((n_data + n_parity) * br, inner)
 
 
-def decode_blocks(
+def decode_blocks_svd(
     y_coded: jnp.ndarray, mask: jnp.ndarray, n_data: int, n_parity: int
 ) -> jnp.ndarray:
-    """Recover the data blocks from any ``n_data`` surviving coded blocks.
+    """Reference decode: in-graph SVD pseudo-inverse of the masked generator.
 
-    y_coded [n_blocks, br, ...] — coded partial results (erased entries may
-    hold garbage); mask [n_blocks] — 1.0 where the block's worker survived.
-
-    SVD pseudo-inverse of the masked (n_blocks x n_data) generator + two
-    iterative-refinement steps against the *unsquared* operator.  (Normal
-    equations would square the submatrix condition number — with float32's
-    ~7 digits that visibly corrupts unlucky erasure patterns; pinv+refine
-    keeps the worst pattern at ~1e-6 relative, verified exhaustively in
-    tests.)  Deterministic shape, differentiable, negligible FLOPs next to
-    the block matmul itself.
+    Kept as (a) the oracle the DecoderCache fast path is tested against
+    exhaustively, (b) the fallback for code geometries too wide for the
+    mask lut (> ``decoding.MAX_LUT_BLOCKS`` blocks), and (c) the seed
+    baseline the decode benchmark A/Bs.  Two iterative-refinement steps
+    against the *unsquared* operator (normal equations would square the
+    submatrix condition number — with float32's ~7 digits that visibly
+    corrupts unlucky erasure patterns; pinv+refine keeps the worst pattern
+    at ~1e-6 relative).
     """
     n_blocks = n_data + n_parity
     b = block_mds_generator(n_blocks, n_data, dtype=jnp.float32)
@@ -156,6 +184,36 @@ def decode_blocks(
     sol = pinv @ flat
     for _ in range(2):  # refinement against bm (cond, not cond²)
         sol = sol + pinv @ (flat - bm @ sol)
+    return sol.reshape((n_data,) + y_coded.shape[1:]).astype(y_coded.dtype)
+
+
+def decode_blocks(
+    y_coded: jnp.ndarray, mask: jnp.ndarray, n_data: int, n_parity: int
+) -> jnp.ndarray:
+    """Recover the data blocks from any ``n_data`` surviving coded blocks.
+
+    y_coded [n_blocks, br, ...] — coded partial results (erased entries may
+    hold garbage); mask [n_blocks] — 1.0 where the block's worker survived.
+
+    Hot path (DESIGN.md §2): the refined float64 pseudo-inverse of every
+    decodable erasure pattern is precomputed once in a ``DecoderCache``;
+    the in-graph decode is a mask-keyed table gather plus ONE small matmul.
+    No SVD custom-call in the step HLO (asserted in tests/test_hlo.py) —
+    deterministic shape, differentiable, shard_map-transparent.  Geometries
+    wider than the lut bound fall back to :func:`decode_blocks_svd`.
+    """
+    from repro.core.decoding import cacheable, get_decoder_cache
+
+    n_blocks = n_data + n_parity
+    if not cacheable(n_data, n_parity):
+        return decode_blocks_svd(y_coded, mask, n_data, n_parity)
+    rec = get_decoder_cache(n_data, n_parity).recovery(mask)  # [n_data, n_blocks]
+    m = mask.astype(jnp.float32)
+    flat = (
+        y_coded.astype(jnp.float32)
+        * m.reshape((n_blocks,) + (1,) * (y_coded.ndim - 1))
+    ).reshape(n_blocks, -1)
+    sol = rec @ flat
     return sol.reshape((n_data,) + y_coded.shape[1:]).astype(y_coded.dtype)
 
 
@@ -188,8 +246,33 @@ class CodedLinear:
     def encode(self, w: jnp.ndarray) -> jnp.ndarray:
         return encode_blocks(w, self.n_data, self.n_parity)
 
-    def apply(self, w_coded: jnp.ndarray, x: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
-        """x [in, batch] -> y [out, batch]; w_coded [n_blocks*br, in]."""
+    def apply(
+        self,
+        w_coded: jnp.ndarray,
+        x: jnp.ndarray,
+        mask: jnp.ndarray,
+        *,
+        kernel_mode: str | None = None,
+    ) -> jnp.ndarray:
+        """x [in, batch] -> y [out, batch]; w_coded [n_blocks*br, in].
+
+        Default: XLA block matmul + mask-keyed cached decode (DESIGN.md §2).
+        ``kernel_mode`` routes through the fused Pallas matmul+decode kernel
+        (``'interpret'``/``'compile'``/``'off'``, see ``repro.kernels.ops``)
+        which applies the recovery matrix to block outputs while they are
+        VMEM-resident — one HBM write total (DESIGN.md §6).  Geometries the
+        DecoderCache refuses ignore ``kernel_mode`` and take the default
+        path's SVD fallback (the fused kernel needs the cached recovery).
+        """
+        if kernel_mode is not None:
+            from repro.core.decoding import cacheable, get_decoder_cache
+
+            if cacheable(self.n_data, self.n_parity):
+                from repro.kernels.ops import coded_matvec_decode
+
+                rec = get_decoder_cache(self.n_data, self.n_parity).recovery(mask)
+                y = coded_matvec_decode(w_coded, x, rec, mode=kernel_mode)
+                return y[: self.out_features]
         y_coded = w_coded @ x  # rows sharded -> each device computes its block
         y_coded = y_coded.reshape(self.n_blocks, self.block_rows, -1)
         y = decode_blocks(y_coded, mask, self.n_data, self.n_parity)
@@ -221,15 +304,11 @@ def coded_block_matmul(
         y_all = y_all.reshape(n_blocks, br, -1)
         return decode_blocks(y_all, m, n_data, n_parity).reshape(n_data * br, -1)
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         local,
         mesh=mesh,
         in_specs=(P(axis, None), P(None, None), P(None)),
         out_specs=P(None, None),
-        # the SVD custom-call inside decode_blocks hides the replication
-        # from the static varying-axes checker; the result IS replicated
-        # (all_gather'ed inputs + replicated mask)
-        check_vma=False,
     )
     return fn(w_coded, x, mask)
 

@@ -13,8 +13,15 @@ Three decoders, each matched to where it runs:
   * ``ls_decode`` / ``masked_pinv_decode`` — least-squares recovery for dense
     (Gaussian) codes; the masked variant is the SPMD any-r-of-q path where
     the erasure pattern arrives as a 0/1 mask of fixed shape.
+  * ``DecoderCache`` — the block-MDS hot path (DESIGN.md §2): every erasure
+    pattern of <= n_parity blocks gets its recovery pseudo-inverse computed
+    ONCE, host-side in float64, and the serving decode selects the cached
+    [n_data, n_blocks] matrix by the mask's bit pattern — a table gather plus
+    one small matmul, no per-step SVD custom-call in the step HLO.
 """
 from __future__ import annotations
+
+import itertools
 
 import numpy as np
 
@@ -136,6 +143,127 @@ def peel_decode_jax(coded: jnp.ndarray, membership: jnp.ndarray, r: int):
     state = (coded.astype(jnp.float32), membership.astype(jnp.float32), y0, known0, 0)
     _, _, y, known, _ = jax.lax.while_loop(cond, body, state)
     return y, known
+
+
+# --------------------------------------------------------------------------
+# Mask-keyed decoder cache for the block-MDS code (DESIGN.md §2)
+# --------------------------------------------------------------------------
+# A lookup table over bitmasks needs 2^n_blocks int32 entries; 20 blocks is
+# 4 MB — beyond that the cache refuses and callers fall back to the SVD path.
+MAX_LUT_BLOCKS = 20
+# The table itself holds sum_e C(n_blocks, e) recovery matrices; high-parity
+# geometries explode combinatorially (10+10 -> 616k patterns, ~0.5 GB and
+# minutes of float64 pinvs) even under the lut bound, so cap the pattern
+# count too — 16 blocks / 4 parity (the serving head) is 2517.
+MAX_LUT_PATTERNS = 8192
+
+
+def decodable_patterns(n_blocks: int, n_parity: int) -> int:
+    """Number of erasure patterns a DecoderCache would precompute."""
+    import math
+
+    return sum(math.comb(n_blocks, e) for e in range(n_parity + 1))
+
+
+def cacheable(n_data: int, n_parity: int) -> bool:
+    """Whether this code geometry fits the DecoderCache bounds."""
+    n_blocks = n_data + n_parity
+    return (
+        n_blocks <= MAX_LUT_BLOCKS
+        and decodable_patterns(n_blocks, n_parity) <= MAX_LUT_PATTERNS
+    )
+
+
+class DecoderCache:
+    """Precomputed recovery matrices for every erasure pattern <= n_parity.
+
+    There are only ``sum_e C(n_blocks, e), e = 0..n_parity`` decodable erasure
+    patterns (2517 for the 16-block, 4-parity serving head), so the refined
+    pseudo-inverse of each masked generator is computed once, host-side, in
+    float64 — Newton–Schulz-polished and with erased columns exactly zeroed —
+    then stored as a float32 table on device:
+
+        table [n_patterns, n_data, n_blocks]   recovery matrices
+        lut   [2^n_blocks] int32               mask bit-pattern -> table row
+
+    ``recovery(mask)`` is trace-friendly: it turns the 0/1 mask into its bit
+    pattern with a dot against powers of two and gathers the table row — the
+    whole decode lowers to gather + matmul, shard_map's replication checker
+    can see through it (no opaque custom-call), and the step HLO carries no
+    SVD (asserted in tests/test_hlo.py).
+
+    Masks with more than ``n_parity`` erasures are not decodable; the lut
+    maps them to the full-mask (identity-prefix) recovery so the program
+    stays total — callers that can observe such masks must check survivor
+    counts themselves (the serving engine's HealthMonitor never exceeds
+    n_parity by construction).
+    """
+
+    def __init__(self, n_data: int, n_parity: int, generator: np.ndarray | None = None):
+        n_blocks = n_data + n_parity
+        if n_blocks > MAX_LUT_BLOCKS:
+            raise ValueError(
+                f"DecoderCache lut would need 2^{n_blocks} entries; "
+                f"use the SVD fallback beyond {MAX_LUT_BLOCKS} blocks"
+            )
+        n_patterns = decodable_patterns(n_blocks, n_parity)
+        if n_patterns > MAX_LUT_PATTERNS:
+            raise ValueError(
+                f"DecoderCache would precompute {n_patterns} patterns "
+                f"(> {MAX_LUT_PATTERNS}); use the SVD fallback for "
+                f"high-parity geometries"
+            )
+        self.n_data, self.n_parity, self.n_blocks = n_data, n_parity, n_blocks
+        if generator is None:
+            from repro.core.coded_ops import block_mds_generator_np
+
+            generator = block_mds_generator_np(n_blocks, n_data)
+        b = np.asarray(generator, np.float64)
+
+        mats: list[np.ndarray] = []
+        lut = np.zeros(1 << n_blocks, np.int32)
+        full = (1 << n_blocks) - 1
+        for n_erased in range(n_parity + 1):
+            for pat in itertools.combinations(range(n_blocks), n_erased):
+                erased = np.zeros(n_blocks, bool)
+                erased[list(pat)] = True
+                bm = b * (~erased)[:, None]
+                pinv = np.linalg.pinv(bm)
+                # one Newton–Schulz step: pinv <- pinv (2I - bm pinv); at
+                # float64 this polishes the SVD pinv to ~1e-15 * cond so the
+                # float32 cast is the only error the hot path ever sees
+                pinv = pinv @ (2.0 * np.eye(n_blocks) - bm @ pinv)
+                pinv[:, erased] = 0.0  # garbage columns exactly dead
+                bits = int(np.sum((1 << np.arange(n_blocks))[~erased]))
+                lut[bits] = len(mats)
+                mats.append(pinv.astype(np.float32))
+        assert lut[full] == 0  # full mask is pattern 0 (also the lut default)
+        # kept as NUMPY: the cache is process-lifetime and may first be built
+        # inside a trace (jit/shard_map), where jnp constants become tracers.
+        # jnp ops lift these to (replicated) constants per trace context.
+        self.table = np.stack(mats)                       # [P, n_data, n_blocks]
+        self.lut = lut                                    # [2^n_blocks]
+        self._pows = (1 << np.arange(n_blocks, dtype=np.int64)).astype(np.int32)
+
+    def index(self, mask: jnp.ndarray) -> jnp.ndarray:
+        """Table row for a 0/1 (or bool) survivor mask — trace-friendly."""
+        bits = jnp.sum((mask > 0.5).astype(jnp.int32) * self._pows)
+        return jnp.take(self.lut, bits)
+
+    def recovery(self, mask: jnp.ndarray) -> jnp.ndarray:
+        """The cached [n_data, n_blocks] recovery matrix for this mask."""
+        return jnp.take(self.table, self.index(mask), axis=0)
+
+
+_DECODER_CACHES: dict[tuple[int, int], DecoderCache] = {}
+
+
+def get_decoder_cache(n_data: int, n_parity: int) -> DecoderCache:
+    """Process-lifetime memoized DecoderCache (one per code geometry)."""
+    key = (n_data, n_parity)
+    if key not in _DECODER_CACHES:
+        _DECODER_CACHES[key] = DecoderCache(n_data, n_parity)
+    return _DECODER_CACHES[key]
 
 
 # --------------------------------------------------------------------------

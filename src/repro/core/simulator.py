@@ -16,6 +16,17 @@ Reproduces the paper's MATLAB simulation methodology exactly:
 
 Provides both completion-time sampling (Figs 3, 5, 8, 10, 11) and the
 E[S(t)] accumulation trajectories (Figs 6, 9).
+
+Performance: the Monte-Carlo hot loop is ARRAY-VECTORIZED across trials —
+one [trials, events] arrival matrix per scheme, batched stable argsort /
+cumsum / count-below instead of a per-trial Python event merge (the paper
+sweeps are minutes of scalar looping otherwise; see benchmarks/decode_bench
+for the measured speedup).  The scalar single-trial functions
+(``completion_time``, ``accumulation_curve_scalar``) are KEPT as the
+reference oracles; the batched paths reproduce them bit-for-bit on fixed
+seeds (asserted in tests/test_simulator.py) because they evaluate the exact
+same float expressions — same event template, same stable tie-break order,
+same summation order where it matters.
 """
 from __future__ import annotations
 
@@ -26,14 +37,17 @@ import numpy as np
 from repro.core.allocation import Allocation, allocate
 from repro.core.distributions import ShiftedExp
 from repro.core.encoding import required_rows
-from repro.utils.prng import derive, rng as _rng
+from repro.utils.prng import derive, rng as _rng, rng_scratch_iter as _rng_scratch_iter
 
 __all__ = [
     "SimResult",
     "sample_rates",
+    "sample_rates_batch",
     "completion_time",
+    "completion_times_batch",
     "simulate_scheme",
     "accumulation_curve",
+    "accumulation_curve_scalar",
 ]
 
 
@@ -76,30 +90,78 @@ def sample_rates(
     return rates
 
 
-def completion_time(alloc: Allocation, rates: np.ndarray, required: int) -> float:
-    """Earliest time the master can recover the result, given realized rates.
+def sample_rates_batch(
+    workers: list[ShiftedExp],
+    seeds: np.ndarray,
+    straggler_prob: float = 0.0,
+    straggler_slowdown: float = 3.0,
+) -> np.ndarray:
+    """[trials, n_workers] rate matrix — one ``sample_rates`` row per seed.
 
-    Uncoded: all workers must deliver their full load -> max_i l_i * rate_i.
-    Coded:   merge per-batch arrival events and stop at ``required`` rows,
-             capping each worker at its own l_i (paper: min(l_i, s_i b_i)).
+    Per-trial Generators are kept (the paper's seeding contract), but each
+    trial's draws are array-sized: numpy Generators consume the bit stream
+    identically for ``exponential(size=n)`` and n scalar calls, so every row
+    is bit-identical to ``sample_rates`` (asserted in tests).
     """
-    loads = alloc.loads
-    if not alloc.coded:
-        return float(np.max(loads * rates))
-    # batch arrival events: worker i delivers b_i rows at k*b_i*rate_i
-    ev_t: list[np.ndarray] = []
+    alphas = np.array([w.alpha for w in workers], dtype=np.float64)
+    mus = np.array([w.mu for w in workers], dtype=np.float64)
+    n = len(workers)
+    draws = np.empty((len(seeds), n), dtype=np.float64)
+    if straggler_prob > 0.0:
+        hits = np.empty((len(seeds), n), dtype=bool)
+        for t, g in enumerate(_rng_scratch_iter(seeds)):
+            draws[t] = g.exponential(size=n)   # stream order as sample_rates:
+            hits[t] = g.uniform(size=n) < straggler_prob  # exp first, then unif
+    else:
+        for t, g in enumerate(_rng_scratch_iter(seeds)):
+            draws[t] = g.exponential(size=n)
+    rates = alphas[None, :] + draws / mus[None, :]
+    if straggler_prob > 0.0:
+        rates = np.where(hits, rates * straggler_slowdown, rates)
+    return rates
+
+
+# --------------------------------------------------------------------------
+# completion time: scalar oracle + batched hot path
+# --------------------------------------------------------------------------
+def _event_template(alloc: Allocation) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Rate-independent batch-arrival events, in the canonical merge order.
+
+    Worker i delivers batch k (of b_i rows, last batch clipped to l_i) at
+    k*b_i*rate_i; events are laid out worker-major, k ascending — the same
+    order the scalar loop concatenates them in, so a stable sort over the
+    realized times tie-breaks identically.  Returns (kb, rows, widx):
+    kb[e] = k*b of event e, rows[e] = rows it delivers, widx[e] = its worker.
+    """
+    kb: list[np.ndarray] = []
     ev_rows: list[np.ndarray] = []
-    for i, (l, p) in enumerate(zip(loads, alloc.batches)):
+    widx: list[np.ndarray] = []
+    for i, (l, p) in enumerate(zip(alloc.loads, alloc.batches)):
         if l == 0:
             continue
         b = int(np.ceil(l / p))
         ks = np.arange(1, int(p) + 1, dtype=np.float64)
         cum = np.minimum(ks * b, l)               # cumulative rows after batch k
-        rows = np.diff(np.concatenate([[0.0], cum]))
-        ev_t.append(ks * b * rates[i])            # arrival of batch k (Eq. 3)
-        ev_rows.append(rows)
-    t = np.concatenate(ev_t)
-    rws = np.concatenate(ev_rows)
+        kb.append(ks * b)                         # Eq. (3): arrival = k*b*rate
+        ev_rows.append(np.diff(np.concatenate([[0.0], cum])))
+        widx.append(np.full(int(p), i, dtype=np.int64))
+    return np.concatenate(kb), np.concatenate(ev_rows), np.concatenate(widx)
+
+
+def completion_time(alloc: Allocation, rates: np.ndarray, required: int) -> float:
+    """Earliest time the master can recover the result, given realized rates.
+
+    Scalar single-trial REFERENCE (the oracle ``completion_times_batch`` is
+    tested against bit-for-bit).  Uncoded: all workers must deliver their
+    full load -> max_i l_i * rate_i.  Coded: merge per-batch arrival events
+    and stop at ``required`` rows, capping each worker at its own l_i
+    (paper: min(l_i, s_i b_i)).
+    """
+    loads = alloc.loads
+    if not alloc.coded:
+        return float(np.max(loads * rates))
+    kb, rws, widx = _event_template(alloc)
+    t = kb * rates[widx]
     order = np.argsort(t, kind="stable")
     csum = np.cumsum(rws[order])
     idx = int(np.searchsorted(csum, required - 1e-9))
@@ -107,6 +169,96 @@ def completion_time(alloc: Allocation, rates: np.ndarray, required: int) -> floa
         return float(t[order][-1])  # even all rows are not enough (cannot happen
         # for valid allocations; defensive)
     return float(t[order][idx])
+
+
+def completion_times_batch(
+    alloc: Allocation, rates: np.ndarray, required: int
+) -> np.ndarray:
+    """Vectorized ``completion_time`` over a [trials, n_workers] rate matrix.
+
+    Instead of materializing and sorting the [trials, events] arrival matrix
+    (the scalar loop's O(E log E) per trial — E is the total batch count,
+    ~q events for the paper's p_i = ⌊ℓ̂_i⌋ default), this exploits that the
+    accumulated-rows curve S(t) = Σ_i min(l_i, s_i(t)·b_i) is a monotone step
+    function evaluable in O(workers): a vectorized float bisection brackets
+    the crossing S(t) >= required down to adjacent float64s, at which point
+    the bracket's upper end IS the crossing event's time, bit-exactly.
+
+    Two details keep it bit-identical to the scalar oracle:
+
+      * arrived-batch counts are polished against the *exact* event-time
+        expression ``(k*b) * rate`` (the float product the oracle sorts),
+        because ``floor(t / (b*rate))`` can disagree by 1 ulp at boundaries;
+      * S(t) sums integer-valued floats, so summation order cannot matter.
+
+    The oracle's defensive tail (required never reached -> last event) falls
+    out naturally: the predicate never fires and the initial upper bound —
+    the latest last-batch arrival — is returned unchanged.
+    """
+    rates = np.asarray(rates, dtype=np.float64)
+    if rates.ndim != 2:
+        raise ValueError(f"rates must be [trials, workers], got {rates.shape}")
+    loads = alloc.loads.astype(np.float64)
+    if not alloc.coded:
+        return np.max(loads[None, :] * rates, axis=1)
+    batches = alloc.batches.astype(np.float64)
+    active = loads > 0
+    b = np.where(active, np.ceil(loads / batches), 0.0)[None, :]    # [1, N]
+    p = np.where(active, batches, 0.0)[None, :]
+    v = required - 1e-9
+    # inf where inactive: t/inf = 0 arrived batches, no divide warnings
+    br = b * rates
+    br = np.where(br > 0.0, br, np.inf)                             # [T, N]
+
+    def counts(t, br_, rates_):  # t [..., 1] -> [..., N] batches arrived by t
+        # exact wrt the oracle's event expression (k*b)*rate: the float
+        # division below is within 1 ulp of the true count, one up/down
+        # polish fixes the boundary cases where they disagree
+        k = np.clip(np.floor(t / br_), 0.0, p)
+        kn = np.minimum(k + 1.0, p)
+        k = np.where((kn * b) * rates_ <= t, kn, k)
+        return np.where(((k * b) * rates_ > t) & (k > 0.0), k - 1.0, k)
+
+    def rows_lower(t):  # t [T] -> [T] S(t), exact except possible OVERcount
+        # bisection-only evaluator: keeps the up-polish (an undercount could
+        # park ``lo`` at/after the crossing event and phase 2 would miss it)
+        # but drops the down-polish — a 1-ulp overcount merely lands ``hi``
+        # one float early, and phase 2 never relies on rows(hi) >= v.
+        tt = t[:, None]
+        k = np.clip(np.floor(tt / br), 0.0, p)
+        kn = np.minimum(k + 1.0, p)
+        k = np.where((kn * b) * rates <= tt, kn, k)
+        return np.minimum(loads[None, :], k * b).sum(axis=-1)
+
+    def rows_many(tc):  # tc [T, C] candidate times -> [T, C]
+        k = counts(tc[:, :, None], br[:, None, :], rates[:, None, :])
+        return np.minimum(loads[None, None, :], k * b).sum(axis=-1)
+
+    hi = np.max((p * b) * rates, axis=1)          # latest last-batch arrival
+    lo = np.zeros_like(hi)
+    # phase 1 — bisect until each bracket is narrower than the tightest
+    # event spacing (b_i * rate_i), i.e. holds at most ONE event per worker.
+    # invariant: rows(lo) < v; rows(hi) >= v unless required is unreachable.
+    spacing = 0.5 * np.min(br, axis=1)
+    while True:
+        mid = 0.5 * (lo + hi)
+        go = (mid > lo) & (mid < hi) & (hi - lo > spacing)
+        if not go.any():
+            break
+        ok = rows_lower(mid) >= v
+        hi = np.where(go & ok, mid, hi)
+        lo = np.where(go & ~ok, mid, lo)
+    # phase 2 — snap: the crossing event is some worker's FIRST arrival
+    # after lo (at most one candidate per worker fits in the bracket);
+    # evaluate S exactly at every candidate, take the earliest that crosses.
+    kn = counts(lo[:, None], br, rates) + 1.0                       # [T, N]
+    valid = kn <= p
+    cand = np.where(valid, (kn * b) * rates, 0.0)  # 0 placeholder: S(0) < v
+    s_at = rows_many(cand)                                          # [T, N]
+    cand = np.where(valid & (s_at >= v), cand, np.inf)
+    t_star = cand.min(axis=1)
+    # unreachable-required tail (oracle: return the very last event)
+    return np.where(np.isfinite(t_star), t_star, hi)
 
 
 def simulate_scheme(
@@ -122,22 +274,27 @@ def simulate_scheme(
     code_kind: str = "gaussian",
     overhead: float = 0.13,
 ) -> SimResult:
-    """Monte-Carlo the completion time of one scheme (paper §4.1.3: 100 runs)."""
+    """Monte-Carlo the completion time of one scheme (paper §4.1.3: 100 runs).
+
+    All trials run through the batched event merge; per-trial seeds are the
+    same ``derive(seed, scheme, trial)`` stream as always, so results are
+    bit-identical to the scalar loop this replaces.
+    """
     kw = {}
     if scheme == "bpcc":
         kw["p"] = p
     alloc = allocate(scheme, r, workers, **kw)
     required = required_rows(r, code_kind, overhead) if alloc.coded else r
-    times = np.empty(n_trials, dtype=np.float64)
-    for trial in range(n_trials):
-        rates = sample_rates(
-            workers, derive(seed, scheme, trial), straggler_prob, straggler_slowdown
-        )
-        times[trial] = completion_time(alloc, rates, required)
+    seeds = np.array([derive(seed, scheme, trial) for trial in range(n_trials)])
+    rates = sample_rates_batch(workers, seeds, straggler_prob, straggler_slowdown)
+    times = completion_times_batch(alloc, rates, required)
     return SimResult(scheme=scheme, times=times, required=required, tau=alloc.tau)
 
 
-def accumulation_curve(
+# --------------------------------------------------------------------------
+# E[S(t)] accumulation: scalar oracle + batched hot path
+# --------------------------------------------------------------------------
+def accumulation_curve_scalar(
     alloc: Allocation,
     workers: list[ShiftedExp],
     t_grid: np.ndarray,
@@ -147,7 +304,7 @@ def accumulation_curve(
     straggler_prob: float = 0.0,
     straggler_slowdown: float = 3.0,
 ) -> np.ndarray:
-    """Mean rows received by time t (E[S(t)], Figs 6/9), averaged over trials.
+    """Per-trial-loop REFERENCE for ``accumulation_curve`` (kept as oracle).
 
     S(t) = sum_i min(l_i, floor(t / (b_i rate_i)) * b_i).
     """
@@ -165,3 +322,31 @@ def accumulation_curve(
         k = np.clip(k, 0, alloc.batches[None, :].astype(np.float64))
         acc += np.minimum(loads[None, :], k * b[None, :]).sum(axis=1)
     return acc / n_trials
+
+
+def accumulation_curve(
+    alloc: Allocation,
+    workers: list[ShiftedExp],
+    t_grid: np.ndarray,
+    *,
+    n_trials: int = 100,
+    seed: int = 0,
+    straggler_prob: float = 0.0,
+    straggler_slowdown: float = 3.0,
+) -> np.ndarray:
+    """Mean rows received by time t (E[S(t)], Figs 6/9), averaged over trials.
+
+    Vectorized across trials: one [grid, trials, workers] tensor.  The
+    summands min(l_i, k·b_i) are integer-valued floats, so float64 addition
+    is exact in any order and the result matches the scalar oracle exactly.
+    """
+    t_grid = np.asarray(t_grid, dtype=np.float64)
+    b = np.ceil(alloc.loads / alloc.batches).astype(np.float64)
+    loads = alloc.loads.astype(np.float64)
+    seeds = np.array([derive(seed, "curve", trial) for trial in range(n_trials)])
+    rates = sample_rates_batch(workers, seeds, straggler_prob, straggler_slowdown)
+    per_batch_t = b[None, :] * rates                       # [T, N] time per batch
+    k = np.floor(t_grid[:, None, None] / per_batch_t[None, :, :])   # [G, T, N]
+    k = np.clip(k, 0, alloc.batches[None, None, :].astype(np.float64))
+    s = np.minimum(loads[None, None, :], k * b[None, None, :]).sum(axis=2)
+    return s.sum(axis=1) / n_trials

@@ -1,1 +1,6 @@
-from repro.kernels.ops import coded_matvec, lt_encode, ssd_forward  # noqa: F401
+from repro.kernels.ops import (  # noqa: F401
+    coded_matvec,
+    coded_matvec_decode,
+    lt_encode,
+    ssd_forward,
+)

@@ -13,19 +13,31 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
+from repro.kernels.coded_decode import coded_matvec_decode_pallas
 from repro.kernels.coded_matvec import coded_matvec_pallas
 from repro.kernels.lt_encode import lt_encode_pallas
 from repro.kernels.ssd_scan import ssd_chunk_pallas, ssd_combine_pallas
 
 Mode = Literal["interpret", "compile", "off"]
 
-__all__ = ["coded_matvec", "lt_encode", "ssd_forward"]
+__all__ = ["coded_matvec", "coded_matvec_decode", "lt_encode", "ssd_forward"]
 
 
 def coded_matvec(a, x, mode: Mode = "interpret", **kw):
     if mode == "off":
         return _ref.ref_coded_matvec(a, x)
     return coded_matvec_pallas(a, x, interpret=(mode == "interpret"), **kw)
+
+
+def coded_matvec_decode(a, x, rec, mode: Mode = "interpret", **kw):
+    """Fused coded block matmul + erasure decode (DESIGN.md §6).
+
+    ``rec`` is the mask-keyed [n_data, n_blocks] recovery matrix from
+    ``repro.core.decoding.DecoderCache.recovery(mask)``.
+    """
+    if mode == "off":
+        return _ref.ref_coded_matvec_decode(a, x, rec)
+    return coded_matvec_decode_pallas(a, x, rec, interpret=(mode == "interpret"), **kw)
 
 
 def lt_encode(a, indices, coeffs, mode: Mode = "interpret", **kw):

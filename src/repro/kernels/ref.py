@@ -9,12 +9,37 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["ref_coded_matvec", "ref_lt_encode", "ref_ssd_chunk", "ref_ssd_combine"]
+__all__ = [
+    "ref_coded_matvec",
+    "ref_coded_matvec_decode",
+    "ref_lt_encode",
+    "ref_ssd_chunk",
+    "ref_ssd_combine",
+]
 
 
 def ref_coded_matvec(a: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
     """y = A x (x may be [M] or thin [M, B]); fp32 accumulation."""
     return jnp.dot(a.astype(jnp.float32), x.astype(jnp.float32))
+
+
+def ref_coded_matvec_decode(
+    a: jnp.ndarray, x: jnp.ndarray, rec: jnp.ndarray
+) -> jnp.ndarray:
+    """Fused matmul+decode oracle: y = R · blocked(A x).
+
+    a [n_blocks*br, M], x [M] or [M, B], rec [n_data, n_blocks] ->
+    [n_data*br(, B)].  Mathematical definition of the fused kernel: the big
+    block matmul followed by the recovery contraction over the block axis.
+    """
+    squeeze = x.ndim == 1
+    xc = x[:, None] if squeeze else x
+    n_data, nb = rec.shape
+    br = a.shape[0] // nb
+    yc = jnp.dot(a.astype(jnp.float32), xc.astype(jnp.float32))
+    y = jnp.einsum("db,brB->drB", rec.astype(jnp.float32), yc.reshape(nb, br, -1))
+    y = y.reshape(n_data * br, -1)
+    return y[:, 0] if squeeze else y
 
 
 def ref_lt_encode(a: jnp.ndarray, indices: jnp.ndarray, coeffs: jnp.ndarray) -> jnp.ndarray:

@@ -15,6 +15,14 @@ BPCC integration (the paper's technique on the serving hot path):
     to ``repro.runtime.health.HealthMonitor.straggler_mask`` to drop shards
     the monitor flags, without stalling the batch (the paper's "don't wait
     for stragglers", bulk-synchronous flavour).
+
+Host-sync discipline (the decode hot loop): greedy argmax runs ON DEVICE
+inside the jitted step, ``last_tok`` stays device-resident and feeds the
+next step without a round-trip, and exactly ONE device->host transfer per
+step (the [n_slots] int32 token vector) serves the bookkeeping (EOS, output
+accumulation).  The seed engine pulled the full [n_slots, vocab] fp32
+logits to host and argmax'd in numpy — at 100k+ vocab that transfer was
+the per-token critical path.
 """
 from __future__ import annotations
 
@@ -76,12 +84,19 @@ class ServeEngine:
         self.queue: deque[Request] = deque()
         self.slots: list[Request | None] = [None] * n_slots
         self.cache = model.init_cache(n_slots, s_max)
-        self._last_tok = np.zeros(n_slots, np.int32)
+        self._last_tok = jnp.zeros(n_slots, jnp.int32)  # device-resident
         self._active = np.zeros(n_slots, bool)
-        self._decode = jax.jit(model.decode_step)
-        self._prefill1 = jax.jit(
-            lambda p, b: model.prefill(p, b, s_max=s_max), static_argnums=()
-        )
+
+        def _decode_argmax(params, cache, last_tok, mask):
+            logits, cache = model.decode_step(params, cache, last_tok, mask)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+        def _prefill_argmax(params, batch):
+            logits, cache1 = model.prefill(params, batch, s_max=s_max)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache1
+
+        self._decode = jax.jit(_decode_argmax)
+        self._prefill1 = jax.jit(_prefill_argmax)
         self.completed: list[Request] = []
 
     # ------------------------------------------------------------------
@@ -97,7 +112,7 @@ class ServeEngine:
             batch["frames"] = jnp.asarray(
                 np.zeros((1, len(req.prompt), self.model.cfg.d_model), np.float32)
             )
-        logits, cache1 = self._prefill1(self.params, batch)
+        tok1, cache1 = self._prefill1(self.params, batch)
 
         def splice(path, full, one):
             ax = _batch_axis(path)
@@ -116,9 +131,8 @@ class ServeEngine:
             return full.at[tuple(idx)].set(src.astype(full.dtype))
 
         self.cache = jax.tree_util.tree_map_with_path(splice, self.cache, cache1)
-        tok = int(np.argmax(np.asarray(logits)[0]))
-        req.out_tokens.append(tok)
-        self._last_tok[slot] = tok
+        self._last_tok = self._last_tok.at[slot].set(tok1[0])  # device-side
+        req.out_tokens.append(int(np.asarray(tok1)[0]))
         self.slots[slot] = req
         self._active[slot] = True
 
@@ -136,17 +150,17 @@ class ServeEngine:
         mask = None
         if self.mask_fn is not None and self.model.cfg.coded:
             mask = jnp.asarray(self.mask_fn(), jnp.float32)
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(self._last_tok), mask
+        toks_dev, self.cache = self._decode(
+            self.params, self.cache, self._last_tok, mask
         )
-        toks = np.argmax(np.asarray(logits), axis=-1).astype(np.int32)
+        self._last_tok = toks_dev           # feeds next step, never leaves device
+        toks = np.asarray(toks_dev)         # the ONE host transfer per step
         for s in range(self.n_slots):
             if not self._active[s]:
                 continue
             req = self.slots[s]
             tok = int(toks[s])
             req.out_tokens.append(tok)
-            self._last_tok[s] = tok
             hit_eos = self.eos_token is not None and tok == self.eos_token
             if req.done or hit_eos:
                 self.completed.append(req)

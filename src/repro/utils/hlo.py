@@ -176,7 +176,9 @@ def _parse_computations(text: str) -> dict[str, list[tuple]]:
         m = _INSTR.match(line)
         if m:
             name, shape_text, op, operands, attrs = m.groups()
-            ops = [o.strip().lstrip("%") for o in operands.split(",") if o.strip().startswith("%")]
+            # operand tokens may carry inline types ("f32[8]{0} %x") on newer
+            # XLA text dumps or be bare ("%x") on older ones — take the names
+            ops = re.findall(r"%([\w.\-]+)", operands)
             cur.append((name, shape_text.strip(), op, ops, attrs))
     return comps
 

@@ -1,0 +1,81 @@
+"""Deterministic mini stand-in for ``hypothesis`` (import fallback only).
+
+The containerized CI image may lack hypothesis (see requirements-dev.txt for
+the real dependency); rather than losing four whole test modules to a
+collection error, this shim provides the tiny strategy surface those modules
+use — ``given``/``settings``/``floats``/``integers``/``sampled_from`` — with
+seeded, reproducible example generation.  No shrinking, no database, no
+``assume``: if a test needs more of hypothesis, install hypothesis.
+
+Example schedule per test: the strategy lower bounds, then the upper bounds,
+then ``max_examples - 2`` pseudo-random draws seeded from the test name.
+"""
+from __future__ import annotations
+
+import functools
+import zlib
+
+import numpy as np
+
+__all__ = ["given", "settings", "strategies"]
+
+
+class _Strategy:
+    def __init__(self, lo_example, hi_example, draw):
+        self._lo, self._hi, self._draw = lo_example, hi_example, draw
+
+    def example(self, i: int, rng: np.random.Generator):
+        if i == 0:
+            return self._lo
+        if i == 1:
+            return self._hi
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+        lo, hi = float(min_value), float(max_value)
+        if lo > 0 and hi / lo > 1e3:  # wide positive range: log-uniform
+            draw = lambda rng: float(np.exp(rng.uniform(np.log(lo), np.log(hi))))
+        else:
+            draw = lambda rng: float(rng.uniform(lo, hi))
+        return _Strategy(lo, hi, draw)
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        lo, hi = int(min_value), int(max_value)
+        return _Strategy(lo, hi, lambda rng: int(rng.integers(lo, hi + 1)))
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        seq = list(elements)
+        return _Strategy(
+            seq[0], seq[-1], lambda rng: seq[int(rng.integers(len(seq)))]
+        )
+
+
+def settings(max_examples: int = 20, deadline=None, **_kw):
+    def deco(fn):
+        fn._minihyp_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_minihyp_max_examples", 20)
+            rng = np.random.default_rng(zlib.crc32(fn.__qualname__.encode()))
+            for i in range(n):
+                ex = {k: s.example(i, rng) for k, s in strats.items()}
+                fn(*args, **ex, **kwargs)
+
+        # pytest resolves fixture names through __wrapped__'s signature;
+        # the strategy-driven params must stay invisible to it
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

@@ -1,7 +1,10 @@
 """Paper math: Lemma 1, Eq. 7/12/13/14, Theorems 5/6/7, Corollary 6.1."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # image without hypothesis: deterministic shim (minihyp)
+    from minihyp import given, settings, strategies as st
 
 from repro.core.allocation import (
     bpcc_allocation,

@@ -2,7 +2,10 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # image without hypothesis: deterministic shim (minihyp)
+    from minihyp import given, settings, strategies as st
 
 from repro.core.decoding import (
     ls_decode,

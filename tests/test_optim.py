@@ -3,7 +3,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # image without hypothesis: deterministic shim (minihyp)
+    from minihyp import given, settings, strategies as st
 
 from repro.data import make_pipeline
 from repro.models import ModelConfig, build_model

@@ -91,7 +91,8 @@ def test_opt_state_specs_inherit_param_specs():
     pspecs = pol.param_specs(shapes)
     ospecs = pol.opt_specs(opt_shapes)
     # the int8 q tensor of each moment matches its parameter spec
-    flat_p = jax.tree.leaves_with_path(pspecs)
+    # (tree_util spelling: jax.tree.leaves_with_path only exists on newer jax)
+    flat_p = jax.tree_util.tree_leaves_with_path(pspecs)
     got_m = {tuple(str(k) for k in p): v
              for p, v in jax.tree_util.tree_flatten_with_path(ospecs["m"])[0]}
     assert len(got_m) > 0

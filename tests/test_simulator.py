@@ -4,12 +4,17 @@ import pytest
 
 from repro.core.allocation import Allocation, allocate
 from repro.core.distributions import ShiftedExp, sample_heterogeneous_cluster
+from repro.core.encoding import required_rows
 from repro.core.simulator import (
     accumulation_curve,
+    accumulation_curve_scalar,
     completion_time,
+    completion_times_batch,
     sample_rates,
+    sample_rates_batch,
     simulate_scheme,
 )
+from repro.utils.prng import derive, rng, rng_scratch
 
 WORKERS = sample_heterogeneous_cluster(10, seed=11)
 
@@ -73,3 +78,66 @@ def test_sample_rates_straggler_multiplier():
     r0 = sample_rates(WORKERS, seed=5, straggler_prob=0.0)
     r1 = sample_rates(WORKERS, seed=5, straggler_prob=1.0, straggler_slowdown=3.0)
     assert np.allclose(r1, r0 * 3.0)
+
+
+# --------------------------------------------------------------------------
+# vectorized hot path == kept scalar oracles, bit for bit
+# --------------------------------------------------------------------------
+def test_rng_scratch_streams_match_reference():
+    for seed in [0, 1, 12345, 2**31 - 2]:
+        a, b = rng(seed), rng_scratch(seed)
+        assert np.array_equal(a.exponential(size=8), b.exponential(size=8))
+        assert np.array_equal(a.uniform(size=5), b.uniform(size=5))
+
+
+def test_sample_rates_batch_bit_identical():
+    seeds = np.array([derive(9, "x", t) for t in range(25)])
+    for sp in [0.0, 0.4]:
+        got = sample_rates_batch(WORKERS, seeds, sp)
+        want = np.stack([sample_rates(WORKERS, int(s), sp) for s in seeds])
+        assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("scheme", ["uniform", "load_balanced", "hcmm", "bpcc"])
+@pytest.mark.parametrize("straggler_prob", [0.0, 0.3])
+def test_completion_times_batch_bit_identical(scheme, straggler_prob):
+    alloc = allocate(scheme, 5000, WORKERS)
+    req = required_rows(5000, "gaussian", 0.13) if alloc.coded else 5000
+    seeds = np.array([derive(3, scheme, t) for t in range(60)])
+    rates = sample_rates_batch(WORKERS, seeds, straggler_prob)
+    got = completion_times_batch(alloc, rates, req)
+    want = np.array([completion_time(alloc, rates[t], req) for t in range(60)])
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("p", [1, 7, 100])
+def test_simulate_scheme_matches_scalar_loop(p):
+    res = simulate_scheme("bpcc", 5000, WORKERS, p=p, n_trials=40, seed=7)
+    alloc = allocate("bpcc", 5000, WORKERS, p=p)
+    req = required_rows(5000, "gaussian", 0.13)
+    want = np.array([
+        completion_time(alloc, sample_rates(WORKERS, derive(7, "bpcc", t)), req)
+        for t in range(40)
+    ])
+    assert np.array_equal(res.times, want)
+
+
+def test_completion_batch_unreachable_required_returns_last_event():
+    alloc = Allocation(
+        loads=np.array([10, 10]), batches=np.array([2, 2]), tau=1.0,
+        scheme="bpcc", coded=True,
+    )
+    rates = np.array([[1.0, 2.0], [0.5, 3.0]])
+    got = completion_times_batch(alloc, rates, required=25)  # > 20 total rows
+    want = np.array([completion_time(alloc, r, 25) for r in rates])
+    assert np.array_equal(got, want)
+
+
+def test_accumulation_curve_matches_scalar_oracle():
+    alloc = allocate("bpcc", 3000, WORKERS)
+    t = np.linspace(0, alloc.tau * 3, 50)
+    got = accumulation_curve(alloc, WORKERS, t, n_trials=20, seed=2,
+                             straggler_prob=0.2)
+    want = accumulation_curve_scalar(alloc, WORKERS, t, n_trials=20, seed=2,
+                                     straggler_prob=0.2)
+    assert np.array_equal(got, want)

@@ -13,17 +13,25 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="reduced trial counts")
     ap.add_argument("--only", default=None,
-                    help="comma list: sim,ec2,kernels,roofline")
+                    help="comma list: sim,ec2,kernels,decode,streaming,roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import decode_bench, kernels_bench, paper_ec2, paper_sim, roofline_bench
+    from benchmarks import (
+        decode_bench,
+        kernels_bench,
+        paper_ec2,
+        paper_sim,
+        roofline_bench,
+        streaming_bench,
+    )
 
     blocks = [
         ("sim", paper_sim.run),        # Figs 1-6 (§4 simulation studies)
         ("ec2", paper_ec2.run),        # Figs 8-11 (§5 EC2 experiments, emulated)
         ("kernels", kernels_bench.run),
         ("decode", decode_bench.run),  # DecoderCache / fused kernel / MC sweep
+        ("streaming", streaming_bench.run),  # residual vs terminal decode
         ("roofline", roofline_bench.run),
     ]
     t0 = time.time()

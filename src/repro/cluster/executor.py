@@ -9,13 +9,26 @@ swapped for injected latency:
   * each worker thread computes its batches **for real** (numpy matmul per
     batch) and *returns* batch k at the model-scheduled observed time
     ``k * b_i * rate_i`` (rate drawn once per task from the shifted
-    exponential, times the unexpected-straggler multiplier),
-  * the master consumes results from a queue; as soon as the accumulated
-    rows reach the recovery threshold it signals workers to stop (paper:
+    exponential — or Weibull/Pareto — times the unexpected-straggler
+    multiplier),
+  * the master consumes results from a queue and merges them in MODEL-TIME
+    order: it drew the realized rates itself, so the full batch-arrival
+    schedule is known a priori and the queue is consumed in exactly that
+    merged order (equivalent to a network delivering in timestamp order) —
+    the consumption order, and with it every reported field, is
+    deterministic in the seed, independent of thread scheduling jitter,
+  * results feed an incremental ``StreamingDecoder`` (DESIGN.md §7) as they
+    arrive, so decode work overlaps waiting; as soon as the accumulated rows
+    reach the recovery threshold the master signals workers to stop (paper:
     "worker nodes will stop execution once the master node receives
-    sufficient amount of results") and decodes,
-  * completion time = arrival of the last needed batch; decode time is
-    measured separately (paper Fig. 8 stacks the two).
+    sufficient amount of results") and runs only the cheap residual decode,
+  * completion time = arrival of the last needed batch; ``t_decode`` is the
+    residual (post-threshold) decode and ``t_decode_ingest`` the overlapped
+    ingest work, so paper-Fig.-8-style stacked timing stays reportable
+    (terminal total ≈ residual + ingest).
+
+``streaming=False`` restores the one-shot terminal decode at the threshold
+(the pre-streaming behaviour; benchmarks A/B the two paths).
 
 ``time_scale`` compresses emulated seconds into wall seconds so the full
 paper experiment grid runs in CI; all *reported* times are in model seconds.
@@ -32,7 +45,7 @@ import numpy as np
 from repro.cluster.profiles import WorkerProfile
 from repro.cluster.straggler import StragglerPolicy
 from repro.core.allocation import Allocation, allocate
-from repro.core.decoding import peel_decode_np
+from repro.core.decoding import StreamingDecoder, ls_decode_np, peel_decode_np
 from repro.core.encoding import (
     EncodePlan,
     GaussianCode,
@@ -40,9 +53,12 @@ from repro.core.encoding import (
     encode_matrix,
     required_rows,
 )
+from repro.core.simulator import batch_arrival_schedule
 from repro.utils.prng import derive
 
 __all__ = ["ClusterEmulator", "TaskResult"]
+
+_DONE = object()  # worker-finished sentinel pushed through the result queue
 
 
 @dataclass
@@ -51,12 +67,13 @@ class TaskResult:
 
     y: np.ndarray               # recovered result [r] (or [r, nrhs])
     t_complete: float           # model-time of the last needed batch arrival
-    t_decode: float             # wall-clock decode seconds (real work)
+    t_decode: float             # wall-clock residual decode seconds (real work)
     rows_received: int          # coded rows consumed by the decoder
     ok: bool                    # decode success
     scheme: str
     arrivals: list[tuple[float, int, int]] = field(default_factory=list)
     # (model_time, worker, rows) per received batch — E[S(t)] curves (Fig 9)
+    t_decode_ingest: float = 0.0  # overlapped (pre-threshold) decode seconds
 
     def rows_by_time(self, t_grid: np.ndarray) -> np.ndarray:
         """S(t) on a grid, from the recorded arrival events."""
@@ -91,24 +108,29 @@ class _Worker(threading.Thread):
         self.out, self.stop, self.t0, self.time_scale = out, stop, t0, time_scale
 
     def run(self) -> None:
-        l = len(self.rows)
-        if l == 0:
-            return
-        b = -(-l // self.p)  # ceil — paper: every batch b_i rows, last may be short
-        for k in range(1, self.p + 1):
-            if self.stop.is_set():
+        try:
+            l = len(self.rows)
+            if l == 0:
                 return
-            lo, hi = (k - 1) * b, min(k * b, l)
-            if lo >= hi:
-                return
-            vals = self.rows[lo:hi] @ self.x          # the real compute
-            t_model = min(k * b, l) * self.rate        # Eq. (3) arrival of batch k
-            t_wall = self.t0 + t_model * self.time_scale
-            delay = t_wall - time.monotonic()
-            if delay > 0:
-                if self.stop.wait(timeout=delay):     # interruptible sleep
+            b = -(-l // self.p)  # ceil — paper: every batch b_i rows, last may be short
+            for k in range(1, self.p + 1):
+                if self.stop.is_set():
                     return
-            self.out.put((t_model, self.wid, lo + self.row_offset, vals))
+                lo, hi = (k - 1) * b, min(k * b, l)
+                if lo >= hi:
+                    return
+                vals = self.rows[lo:hi] @ self.x          # the real compute
+                t_model = min(k * b, l) * self.rate        # Eq. (3) arrival of batch k
+                t_wall = self.t0 + t_model * self.time_scale
+                delay = t_wall - time.monotonic()
+                if delay > 0:
+                    if self.stop.wait(timeout=delay):     # interruptible sleep
+                        return
+                self.out.put((t_model, self.wid, lo + self.row_offset, vals))
+        finally:
+            # always announce completion so the master's watermark can pass
+            # this worker, whatever exit path the thread took
+            self.out.put((np.inf, self.wid, -1, _DONE))
 
 
 class ClusterEmulator:
@@ -139,20 +161,30 @@ class ClusterEmulator:
         code: str = "lt",
         overhead: float = 0.13,
         alloc: Allocation | None = None,
+        streaming: bool = True,
     ) -> TaskResult:
         """Distributed y = A x under ``scheme`` ('uniform' | 'load_balanced' |
-        'hcmm' | 'bpcc')."""
+        'hcmm' | 'bpcc').  ``streaming`` overlaps decode with arrivals via
+        ``StreamingDecoder``; False keeps the one-shot terminal decode."""
         r, m = a.shape
         if x.shape[0] != m:
             raise ValueError(f"x has {x.shape[0]} entries, A has {m} columns")
         task_id = self._task_counter
         self._task_counter += 1
 
-        # accept WorkerProfile or bare ShiftedExp
+        # accept WorkerProfile or bare service-time models
         models = [getattr(w, "model", w) for w in self.profiles]
         if alloc is None:
             kw = {"p": p} if scheme == "bpcc" else {}
-            alloc = allocate(scheme, r, models, **kw)
+            # the paper's tau* analysis assumes recovery once S(t) reaches
+            # the required rows; LT peeling requires r(1+eps), so Algorithm 1
+            # must size loads for that target — allocating for bare r leaves
+            # total_rows below the decode threshold and the master degenerates
+            # to a full drain (slowest-worker completion)
+            r_alloc = r
+            if scheme in ("bpcc", "hcmm") and code == "lt":
+                r_alloc = required_rows(r, "lt", overhead)
+            alloc = allocate(scheme, r_alloc, models, **kw)
 
         # ---- encode & distribute (pre-stored in the paper; excluded from T)
         if alloc.coded:
@@ -183,7 +215,7 @@ class ClusterEmulator:
             need = r
 
         offsets = np.concatenate([[0], np.cumsum(alloc.loads)])
-        # ---- realized rates: shifted-exp draw x unexpected-straggler multiplier
+        # ---- realized rates: service-time draw x unexpected-straggler mult
         rates = np.array(
             [
                 mdl.sample_task_rate(derive(self.seed, "rate", task_id, i), 1)[0]
@@ -208,20 +240,30 @@ class ClusterEmulator:
         for t in threads:
             t.start()
 
-        # ---- master: consume until enough rows, decode, RETRY with more
-        # rows if the erasure pattern defeats the decoder (real systems keep
-        # draining the network rather than declaring failure at r(1+eps))
+        # ---- master: merge arrivals in model-time order, overlap decode,
+        # RETRY with more rows if the erasure pattern defeats the decoder
+        # (real systems keep draining the network rather than declaring
+        # failure at r(1+eps))
         nrhs = 1 if x.ndim == 1 else x.shape[1]
         got_rows = np.zeros(alloc.total_rows, dtype=bool)
         buf = np.zeros((alloc.total_rows, nrhs), dtype=np.float64)
         arrivals: list[tuple[float, int, int]] = []
         rows_seen, t_complete = 0, np.inf
         deadline = t0 + 600.0  # hard wall-clock guard
-        target = need
+        # the r(1+eps) rule of thumb can exceed what the allocation encoded
+        # (tight-redundancy grids); the drain target must stay reachable
+        target = min(need, alloc.total_rows)
         t_decode = 0.0
+        t_ingest = 0.0
         y, ok = np.zeros((r, nrhs)), False
+        decoder = (
+            StreamingDecoder.for_plan(plan, nrhs)
+            if (streaming and alloc.coded)
+            else None
+        )
 
-        def _decode():
+        def _decode_terminal():
+            """One-shot decode of everything received (streaming=False)."""
             td0 = time.perf_counter()
             if not alloc.coded:
                 res = buf[:r], bool(got_rows[:r].all())
@@ -229,13 +271,12 @@ class ClusterEmulator:
                 sel = np.flatnonzero(got_rows)
                 if plan.kind == "gaussian":
                     # float64 normal equations (f32 squares the condition
-                    # number and visibly corrupts large r)
-                    g = plan.dense_generator()[sel].astype(np.float64)
-                    gtg = g.T @ g + 1e-10 * np.eye(r, dtype=np.float64)
-                    res = (
-                        np.linalg.solve(gtg, g.T @ buf[sel].astype(np.float64)),
-                        len(sel) >= r,
-                    )
+                    # number and visibly corrupts large r); ls_decode_np is
+                    # the streaming path's one-shot reference, so the two
+                    # modes agree bit-for-bit on identical received sets
+                    g = plan.dense_generator()[sel]
+                    yy, okk, _ = ls_decode_np(g, buf[sel])
+                    res = yy, okk
                 else:
                     yy, okk, _ = peel_decode_np(
                         buf[sel], plan.indices[sel], plan.coeffs[sel], r
@@ -243,27 +284,82 @@ class ClusterEmulator:
                     res = yy, okk
             return res, time.perf_counter() - td0
 
-        while time.monotonic() < deadline:
-            drained = False
-            while rows_seen < target:
+        def _decode_current():
+            """Decode attempt at the current received set."""
+            if decoder is None:
+                return _decode_terminal()
+            td0 = time.perf_counter()
+            yy, okk, _ = decoder.finalize()
+            return (yy, okk), time.perf_counter() - td0
+
+        # the master drew the rates, so every batch arrival (t_model, wid,
+        # row_lo, n_rows) is known a priori — consume the queue in exactly
+        # this merged order (ties broken by (t, wid, lo)); late queue
+        # deliveries park in ``pending`` until their turn
+        schedule = batch_arrival_schedule(alloc, rates)
+        done = False
+
+        rows_at_last_attempt = -1
+
+        def _process(ev) -> bool:
+            """Consume one event in merged order; True when decode succeeded."""
+            nonlocal rows_seen, t_complete, target, t_decode, t_ingest, y, ok
+            nonlocal rows_at_last_attempt
+            t_model, wid, lo, vals = ev
+            vals2 = vals.reshape(len(vals), nrhs)
+            buf[lo : lo + len(vals2)] = vals2
+            got_rows[lo : lo + len(vals2)] = True
+            rows_seen += len(vals2)
+            arrivals.append((t_model, wid, len(vals2)))
+            if decoder is not None:
+                ti0 = time.perf_counter()
+                decoder.ingest(np.arange(lo, lo + len(vals2)), vals2)
+                t_ingest += time.perf_counter() - ti0
+                # streaming: the decoder reports EXACT decodability (LT:
+                # peeling recovered all r sources; Gaussian: >= r rows), so
+                # the master stops at the true "sufficient amount of
+                # results" — often before the r(1+eps) rule of thumb
+                if not decoder.decodable:
+                    return False
+            elif rows_seen < target:
+                return False
+            t_complete = t_model
+            (yy, okk), dt_dec = _decode_current()
+            t_decode += dt_dec
+            y, ok = yy, okk
+            rows_at_last_attempt = rows_seen
+            if not ok:  # undecodable erasure pattern: drain more rows
+                target = min(
+                    alloc.total_rows, max(target + max(r // 50, 1), rows_seen + 1)
+                )
+            return ok
+
+        pending: dict[tuple[int, int], tuple[float, np.ndarray]] = {}
+        for t_sched, wid, lo, _n in schedule:
+            key = (wid, lo)
+            while key not in pending and time.monotonic() < deadline:
                 try:
-                    t_model, wid, lo, vals = out_q.get(timeout=1.0)
+                    t_model, w_ev, lo_ev, vals = out_q.get(timeout=1.0)
                 except queue.Empty:
                     if not any(t.is_alive() for t in threads) and out_q.empty():
-                        drained = True
-                        break
+                        break  # defensive: a worker died without delivering
                     continue
-                vals2 = vals.reshape(len(vals), nrhs)
-                buf[lo : lo + len(vals2)] = vals2
-                got_rows[lo : lo + len(vals2)] = True
-                rows_seen += len(vals2)
-                arrivals.append((t_model, wid, len(vals2)))
-                t_complete = t_model
-            (y, ok), dt_dec = _decode()
-            t_decode += dt_dec
-            if ok or drained or rows_seen >= alloc.total_rows:
+                if vals is not _DONE:
+                    pending[(w_ev, lo_ev)] = (t_model, vals)
+            if key not in pending:
+                break  # deadline / dead worker: decode what we have
+            t_model, vals = pending.pop(key)
+            if _process((t_model, wid, lo, vals)):
+                done = True
                 break
-            target = min(alloc.total_rows, max(target + max(r // 50, 1), rows_seen + 1))
+
+        if not done and rows_seen and not ok and rows_seen != rows_at_last_attempt:
+            # drained without ever attempting a decode at this received set
+            # (rows exhausted below target): one final attempt on everything
+            (y, ok), dt_dec = _decode_current()
+            t_decode += dt_dec
+            if arrivals:
+                t_complete = max(a_[0] for a_ in arrivals)
         stop.set()
         for t in threads:
             t.join(timeout=5.0)
@@ -277,4 +373,5 @@ class ClusterEmulator:
             ok=bool(ok),
             scheme=scheme,
             arrivals=arrivals,
+            t_decode_ingest=float(t_ingest),
         )

@@ -29,7 +29,7 @@ from functools import lru_cache
 import numpy as np
 from scipy import optimize, special
 
-from repro.core.distributions import ShiftedExp
+from repro.core.distributions import ShiftedExp, as_shifted_exp
 
 __all__ = [
     "Allocation",
@@ -132,6 +132,7 @@ def _int_exp_inv(c: float) -> float:
 
 def tau_star_infimum(r: int, workers: list[ShiftedExp]) -> float:
     """Theorem 6 Eq. (18): inf τ* as every p_i → ∞."""
+    workers = [as_shifted_exp(w) for w in workers]
     denom = sum(
         (1.0 - np.exp(min(w.mu * w.alpha, 700.0)) * _int_exp_inv(w.mu * w.alpha)) / w.alpha
         for w in workers
@@ -141,6 +142,7 @@ def tau_star_infimum(r: int, workers: list[ShiftedExp]) -> float:
 
 def tau_star_supremum(r: int, workers: list[ShiftedExp]) -> float:
     """Theorem 6 Eq. (19) with the missing ``r /`` restored: τ*(p=1) = r/β(p=1)."""
+    workers = [as_shifted_exp(w) for w in workers]
     lams = np.array([lambda_supremum(w.mu, w.alpha) for w in workers])
     ps = np.ones(len(workers), dtype=np.int64)
     return tau_star(r, lams, workers, ps)
@@ -148,6 +150,7 @@ def tau_star_supremum(r: int, workers: list[ShiftedExp]) -> float:
 
 def load_infimum(r: int, workers: list[ShiftedExp]) -> np.ndarray:
     """Corollary 6.1 Eq. (20): ℓ̂_i = limit of ℓ_i* as all p_j → ∞."""
+    workers = [as_shifted_exp(w) for w in workers]
     denom = sum(
         (1.0 - np.exp(min(w.mu * w.alpha, 700.0)) * _int_exp_inv(w.mu * w.alpha)) / w.alpha
         for w in workers
@@ -215,8 +218,16 @@ def bpcc_allocation(
         raise ValueError("need at least one worker")
     if r < 1:
         raise ValueError("r must be positive")
+    # Weibull/Pareto (and any future service-time model) run Algorithm 1 on
+    # their shifted-exponential surrogate — the paper's Eq. (7) system is
+    # derived for that CDF only (see distributions.as_shifted_exp).
+    workers = [as_shifted_exp(w) for w in workers]
     if p is None:
-        ps = np.maximum(np.floor(load_infimum(r, workers)).astype(np.int64), 1)
+        # ⌊ℓ̂_i⌋ capped at r: one row per batch is already the finest useful
+        # granularity, and ℓ̂ ~ 1/alpha explodes for near-zero shifts (e.g.
+        # surrogate-converted heavy-tail models) — without the cap the
+        # Eq. (7) solver would materialize arange(1, ℓ̂) for absurd ℓ̂
+        ps = np.clip(np.floor(load_infimum(r, workers)), 1, max(r, 1)).astype(np.int64)
     else:
         ps = np.broadcast_to(np.asarray(p, dtype=np.int64), (n,)).copy()
         if (ps < 1).any():
@@ -269,6 +280,7 @@ def load_balanced_allocation(r: int, workers: list[ShiftedExp]) -> Allocation:
     i.e. (mu alpha + 1)/mu.
     """
     n = len(workers)
+    workers = [as_shifted_exp(w) for w in workers]
     w = np.array([wk.mu / (wk.mu * wk.alpha + 1.0) for wk in workers])
     raw = r * w / w.sum()
     loads = np.floor(raw).astype(np.int64)

@@ -41,10 +41,14 @@ from repro.utils.prng import derive, rng as _rng, rng_scratch_iter as _rng_scrat
 
 __all__ = [
     "SimResult",
+    "DecodeCostModel",
+    "batch_arrival_schedule",
     "sample_rates",
     "sample_rates_batch",
     "completion_time",
     "completion_times_batch",
+    "completion_time_with_decode",
+    "completion_times_with_decode_batch",
     "simulate_scheme",
     "accumulation_curve",
     "accumulation_curve_scalar",
@@ -59,6 +63,9 @@ class SimResult:
     times: np.ndarray  # [n_trials] completion times
     required: int      # rows the master needed
     tau: float         # analytic tau* (nan for uncoded)
+    # decode-inclusive curves (None unless simulate_scheme got a decode_cost)
+    times_decode_terminal: np.ndarray | None = None
+    times_decode_pipelined: np.ndarray | None = None
 
     @property
     def mean(self) -> float:
@@ -77,13 +84,13 @@ def sample_rates(
 ) -> np.ndarray:
     """Per-worker seconds-per-row for one task realization.
 
-    One exponential draw per worker per task (the paper's model: batches of a
-    task share the realization), then the unexpected-straggler multiplier.
+    One service-time draw per worker per task (the paper's model: batches of
+    a task share the realization), then the unexpected-straggler multiplier.
+    Workers may be any service-time model (ShiftedExp / Weibull / Pareto);
+    draws come off one shared Generator in worker order.
     """
     g = _rng(seed)
-    rates = np.array(
-        [w.alpha + g.exponential(1.0) / w.mu for w in workers], dtype=np.float64
-    )
+    rates = np.array([w._draw(g) for w in workers], dtype=np.float64)
     if straggler_prob > 0.0:
         hit = g.uniform(size=len(workers)) < straggler_prob
         rates = np.where(hit, rates * straggler_slowdown, rates)
@@ -101,11 +108,25 @@ def sample_rates_batch(
     Per-trial Generators are kept (the paper's seeding contract), but each
     trial's draws are array-sized: numpy Generators consume the bit stream
     identically for ``exponential(size=n)`` and n scalar calls, so every row
-    is bit-identical to ``sample_rates`` (asserted in tests).
+    is bit-identical to ``sample_rates`` (asserted in tests).  Clusters with
+    non-shifted-exp members fall back to per-worker scalar draws in the same
+    stream order — still bit-identical to ``sample_rates``, just not array-
+    vectorized (mixed families have no common array sampler).
     """
+    n = len(workers)
+    if not all(type(w) is ShiftedExp for w in workers):
+        rates = np.empty((len(seeds), n), dtype=np.float64)
+        if straggler_prob > 0.0:
+            hits = np.empty((len(seeds), n), dtype=bool)
+            for t, g in enumerate(_rng_scratch_iter(seeds)):
+                rates[t] = [w._draw(g) for w in workers]
+                hits[t] = g.uniform(size=n) < straggler_prob
+            return np.where(hits, rates * straggler_slowdown, rates)
+        for t, g in enumerate(_rng_scratch_iter(seeds)):
+            rates[t] = [w._draw(g) for w in workers]
+        return rates
     alphas = np.array([w.alpha for w in workers], dtype=np.float64)
     mus = np.array([w.mu for w in workers], dtype=np.float64)
-    n = len(workers)
     draws = np.empty((len(seeds), n), dtype=np.float64)
     if straggler_prob > 0.0:
         hits = np.empty((len(seeds), n), dtype=bool)
@@ -146,6 +167,40 @@ def _event_template(alloc: Allocation) -> tuple[np.ndarray, np.ndarray, np.ndarr
         ev_rows.append(np.diff(np.concatenate([[0.0], cum])))
         widx.append(np.full(int(p), i, dtype=np.int64))
     return np.concatenate(kb), np.concatenate(ev_rows), np.concatenate(widx)
+
+
+def batch_arrival_schedule(
+    alloc: Allocation, rates: np.ndarray
+) -> list[tuple[float, int, int, int]]:
+    """The EMULATOR's merged batch-arrival schedule, sorted by (t, wid, lo):
+    (t_model, worker, global_row_lo, n_rows) per batch.
+
+    This is the event algebra ``cluster._Worker`` executes — p_i clamped to
+    the load, batch k of b_i = ceil(l_i / p_i) rows delivered at
+    ``min(k·b_i, l_i) · rate_i`` (a short LAST batch arrives when its rows
+    are done) — shared by the executor's master merge and
+    benchmarks/streaming_bench so they cannot drift apart.  NOTE the
+    deliberate difference from ``_event_template`` above: the paper's
+    Eq. (3) model (and all simulator figures) keeps the unclipped k·b_i
+    arrival for the short last batch.
+    """
+    offsets = np.concatenate([[0], np.cumsum(alloc.loads)])
+    schedule: list[tuple[float, int, int, int]] = []
+    for i, (l, p) in enumerate(zip(alloc.loads, alloc.batches)):
+        l = int(l)
+        if l == 0:
+            continue
+        pw = max(1, min(int(p), l))
+        b = -(-l // pw)  # ceil
+        for k in range(1, pw + 1):
+            lo, hi = (k - 1) * b, min(k * b, l)
+            if lo >= hi:
+                break
+            schedule.append(
+                (hi * float(rates[i]), i, int(offsets[i]) + lo, hi - lo)
+            )
+    schedule.sort()
+    return schedule
 
 
 def completion_time(alloc: Allocation, rates: np.ndarray, required: int) -> float:
@@ -261,6 +316,107 @@ def completion_times_batch(
     return np.where(np.isfinite(t_star), t_star, hi)
 
 
+# --------------------------------------------------------------------------
+# Decode-overlap cost model: pipelined vs terminal decode completion
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class DecodeCostModel:
+    """Master-side decode cost for the overlap model (DESIGN.md §7).
+
+    ingest_per_row — seconds of incremental decode work per ingested coded
+    row (peeling propagation / Gram accumulation); residual — flat seconds of
+    post-threshold work (back-substitution / ripple drain).  Calibrate from
+    ``benchmarks/streaming_bench.py`` measurements.
+    """
+
+    ingest_per_row: float
+    residual: float = 0.0
+
+    def __post_init__(self):
+        if self.ingest_per_row < 0 or self.residual < 0:
+            raise ValueError(f"decode costs must be >= 0, got {self}")
+
+
+def completion_time_with_decode(
+    alloc: Allocation,
+    rates: np.ndarray,
+    required: int,
+    cost: DecodeCostModel | None,
+) -> tuple[float, float]:
+    """(terminal, pipelined) completion including master decode work — the
+    scalar single-trial REFERENCE for ``completion_times_with_decode_batch``.
+
+    Terminal: the master waits for the threshold crossing, then decodes
+    everything — arrival of the crossing event + ingest work for every
+    consumed batch + the residual.  Pipelined: each batch's ingest work
+    overlaps the wait for the next arrival (a busy-time recurrence
+    ``busy = max(t_k, busy) + w_k``), leaving only work that could not be
+    hidden, + the residual.  With ``cost=None`` (overlap accounting off) both
+    reduce EXACTLY to ``completion_time`` — bit-identical, asserted in
+    tests.  Uncoded schemes have no decode: both equal the plain completion.
+    """
+    if cost is None or not alloc.coded:
+        base = completion_time(alloc, rates, required)
+        return base, base
+    kb, rws, widx = _event_template(alloc)
+    t = kb * rates[widx]
+    order = np.argsort(t, kind="stable")
+    ts, rw = t[order], rws[order]
+    csum = np.cumsum(rw)
+    idx = int(np.searchsorted(csum, required - 1e-9))
+    idx = min(idx, len(ts) - 1)  # oracle's defensive tail: last event
+    w = rw * cost.ingest_per_row
+    cw = np.cumsum(w)                                  # W_k, 1-based prefixes
+    terminal = float(ts[idx] + cw[idx] + cost.residual)
+    # busy_K = W_K + max_{k<=K}(t_k − W_{k−1}): the busy-time recurrence
+    # busy = max(t_k, busy) + w_k in closed form.  Max is rounding-free, so
+    # fixing the summation association (prefix sums) makes the batched path
+    # reproducible bit-for-bit; the naive recurrence agrees to ~1 ulp
+    # (cross-checked in tests).
+    wshift = np.concatenate([[0.0], cw[:-1]])
+    busy = float(np.max((ts - wshift)[: idx + 1]) + cw[idx])
+    return terminal, busy + cost.residual
+
+
+def completion_times_with_decode_batch(
+    alloc: Allocation,
+    rates: np.ndarray,
+    required: int,
+    cost: DecodeCostModel | None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorized ``completion_time_with_decode`` over [trials, workers].
+
+    Unlike ``completion_times_batch`` (which bisects to avoid materializing
+    events), the pipelined busy-time needs every pre-crossing event, so this
+    materializes the [trials, events] arrival matrix and uses the prefix-max
+    identity  busy_K = W_K + max_{k<=K}(t_k − W_{k−1})  with W = cumsum(w).
+    Summation/merge order matches the scalar oracle exactly.
+    """
+    rates = np.asarray(rates, dtype=np.float64)
+    if rates.ndim != 2:
+        raise ValueError(f"rates must be [trials, workers], got {rates.shape}")
+    if cost is None or not alloc.coded:
+        base = completion_times_batch(alloc, rates, required)
+        return base, base
+    kb, rws, widx = _event_template(alloc)
+    t = kb[None, :] * rates[:, widx]                       # [T, E]
+    order = np.argsort(t, axis=1, kind="stable")
+    ts = np.take_along_axis(t, order, axis=1)
+    rw = rws[order]                                        # [T, E]
+    csum = np.cumsum(rw, axis=1)
+    # crossing index per trial (defensive clamp to the last event)
+    idx = (csum >= required - 1e-9).argmax(axis=1)
+    missed = csum[:, -1] < required - 1e-9
+    idx = np.where(missed, csum.shape[1] - 1, idx)
+    w = rw * cost.ingest_per_row
+    cw = np.cumsum(w, axis=1)                              # W_k (1-based prefix)
+    take = np.arange(len(idx)), idx
+    terminal = ts[take] + cw[take] + cost.residual
+    wshift = np.concatenate([np.zeros((cw.shape[0], 1)), cw[:, :-1]], axis=1)
+    busy = np.maximum.accumulate(ts - wshift, axis=1)[take] + cw[take]
+    return terminal, busy + cost.residual
+
+
 def simulate_scheme(
     scheme: str,
     r: int,
@@ -273,12 +429,15 @@ def simulate_scheme(
     straggler_slowdown: float = 3.0,
     code_kind: str = "gaussian",
     overhead: float = 0.13,
+    decode_cost: DecodeCostModel | None = None,
 ) -> SimResult:
     """Monte-Carlo the completion time of one scheme (paper §4.1.3: 100 runs).
 
     All trials run through the batched event merge; per-trial seeds are the
     same ``derive(seed, scheme, trial)`` stream as always, so results are
-    bit-identical to the scalar loop this replaces.
+    bit-identical to the scalar loop this replaces.  With ``decode_cost``
+    set, ``times_decode_terminal`` / ``times_decode_pipelined`` carry the
+    decode-inclusive completion curves (terminal vs overlap-pipelined).
     """
     kw = {}
     if scheme == "bpcc":
@@ -288,7 +447,15 @@ def simulate_scheme(
     seeds = np.array([derive(seed, scheme, trial) for trial in range(n_trials)])
     rates = sample_rates_batch(workers, seeds, straggler_prob, straggler_slowdown)
     times = completion_times_batch(alloc, rates, required)
-    return SimResult(scheme=scheme, times=times, required=required, tau=alloc.tau)
+    term, pipe = (None, None)
+    if decode_cost is not None:
+        term, pipe = completion_times_with_decode_batch(
+            alloc, rates, required, decode_cost
+        )
+    return SimResult(
+        scheme=scheme, times=times, required=required, tau=alloc.tau,
+        times_decode_terminal=term, times_decode_pipelined=pipe,
+    )
 
 
 # --------------------------------------------------------------------------

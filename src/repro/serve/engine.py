@@ -14,7 +14,13 @@ BPCC integration (the paper's technique on the serving hot path):
   * the per-step erasure mask comes from a pluggable ``mask_fn`` — wire it
     to ``repro.runtime.health.HealthMonitor.straggler_mask`` to drop shards
     the monitor flags, without stalling the batch (the paper's "don't wait
-    for stragglers", bulk-synchronous flavour).
+    for stragglers", bulk-synchronous flavour);
+  * alternatively ``latency_fn`` supplies per-shard latency estimates and
+    the engine consumes the FIRST DECODABLE SUBSET of shard outputs each
+    step: the ``n_data`` earliest shards survive, the ``n_parity`` laggards
+    are dropped (``first_decodable_mask``), and the mask-keyed
+    ``DecoderCache`` decodes whichever subset that step produced — a
+    per-step-varying mask costs one table gather, never an SVD.
 
 Host-sync discipline (the decode hot loop): greedy argmax runs ON DEVICE
 inside the jitted step, ``last_tok`` stays device-resident and feeds the
@@ -76,10 +82,12 @@ class ServeEngine:
         s_max: int = 256,
         mask_fn: Callable[[], np.ndarray] | None = None,
         eos_token: int | None = None,
+        latency_fn: Callable[[], np.ndarray] | None = None,
     ):
         self.model, self.params = model, params
         self.n_slots, self.s_max = n_slots, s_max
         self.mask_fn = mask_fn
+        self.latency_fn = latency_fn
         self.eos_token = eos_token
         self.queue: deque[Request] = deque()
         self.slots: list[Request | None] = [None] * n_slots
@@ -148,7 +156,22 @@ class ServeEngine:
         if not self._active.any():
             return 0
         mask = None
-        if self.mask_fn is not None and self.model.cfg.coded:
+        if self.model.cfg.coded and self.latency_fn is not None:
+            # first decodable subset: keep the n_data earliest shards this
+            # step, drop the laggards — the mask-keyed DecoderCache decodes
+            # any such subset without waiting for the slowest n_parity
+            from repro.core.decoding import first_decodable_mask
+            from repro.models.transformer import _coded_blocks
+
+            lat = np.asarray(self.latency_fn(), np.float64)
+            if self.mask_fn is not None:  # dead shards never count as fast
+                lat = np.where(np.asarray(self.mask_fn()) > 0.5, lat, np.inf)
+            n_blocks = _coded_blocks(self.model.cfg)
+            n_par = self.model.cfg.coded_parity
+            mask = jnp.asarray(
+                first_decodable_mask(lat, n_blocks - n_par, n_par), jnp.float32
+            )
+        elif self.mask_fn is not None and self.model.cfg.coded:
             mask = jnp.asarray(self.mask_fn(), jnp.float32)
         toks_dev, self.cache = self._decode(
             self.params, self.cache, self._last_tok, mask

@@ -1,0 +1,45 @@
+"""Regenerate golden_allocation.json — run ONLY for an intentional numerical
+change to the allocation math, and say so in the commit message.
+
+    PYTHONPATH=src python tests/fixtures/regen_golden_allocation.py
+"""
+import json
+import os
+
+from repro.core.allocation import bpcc_allocation, tau_star_infimum, tau_star_supremum
+from repro.core.distributions import sample_heterogeneous_cluster
+
+
+def build() -> dict:
+    workers = sample_heterogeneous_cluster(10, seed=0)
+    r = 10_000
+    fix = {
+        "note": "Golden values pinning the paper Fig. 1-2 reproduction: "
+                "tau*(p) and Algorithm-1 loads on the section-4.1.3 cluster "
+                "(mu_i ~ U[1,50], alpha_i = 1/mu_i, seed 0), r = 10000. "
+                "Regenerate ONLY for an intentional numerical change: "
+                "PYTHONPATH=src python tests/fixtures/regen_golden_allocation.py",
+        "r": r,
+        "workers": [{"mu": w.mu, "alpha": w.alpha} for w in workers],
+        "tau_supremum": tau_star_supremum(r, workers),
+        "tau_infimum": tau_star_infimum(r, workers),
+        "grid": [],
+    }
+    for p in [1, 2, 5, 10, 50, None]:
+        alloc = bpcc_allocation(r, workers, p=p)
+        fix["grid"].append({
+            "p": p,
+            "tau": alloc.tau,
+            "loads": [int(v) for v in alloc.loads],
+            "batches": [int(v) for v in alloc.batches],
+            "lams": [float(v) for v in alloc.lams],
+        })
+    return fix
+
+
+if __name__ == "__main__":
+    out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "golden_allocation.json")
+    with open(out, "w") as f:
+        json.dump(build(), f, indent=1)
+    print(f"wrote {out}")

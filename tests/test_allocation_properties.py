@@ -1,0 +1,105 @@
+"""Property-based invariants of the paper's allocation math (Algorithm 1).
+
+Fuzzed across randomized heterogeneous (alpha, mu) profiles:
+
+  * the Eq. (7) root lies inside Lemma 1's [infimum, supremum] bracket,
+  * tau* is monotone DECREASING in p (Theorem 5),
+  * Algorithm 1 loads satisfy l_i >= p_i after the §3.2 repair loop.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # image without hypothesis: deterministic shim (minihyp)
+    from minihyp import given, settings, strategies as st
+
+from repro.core.allocation import (
+    bpcc_allocation,
+    eq7_lhs,
+    lambda_infimum,
+    lambda_supremum,
+    solve_lambda,
+    tau_star_infimum,
+    tau_star_supremum,
+)
+from repro.core.distributions import Pareto, ShiftedExp, Weibull
+from repro.utils.prng import rng
+
+
+def _profile(seed: int, n: int) -> list[ShiftedExp]:
+    g = rng(seed)
+    mus = g.uniform(1.0, 50.0, size=n)
+    alphas = g.uniform(0.5, 2.0, size=n) / mus  # around the paper's 1/mu
+    return [ShiftedExp(mu=float(m), alpha=float(a)) for m, a in zip(mus, alphas)]
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    mu=st.floats(0.5, 200.0),
+    alpha=st.floats(1e-4, 2.0),
+    p=st.integers(1, 400),
+)
+def test_eq7_root_inside_lemma1_bracket(mu, alpha, p):
+    lam = solve_lambda(mu, alpha, p)
+    lo, hi = lambda_infimum(mu, alpha), lambda_supremum(mu, alpha)
+    assert lo <= lam <= hi * (1.0 + 1e-10)
+    if lam > lo * (1.0 + 1e-9):  # interior root: it must actually solve Eq. (7)
+        assert eq7_lhs(lam, mu, alpha, p) == pytest.approx(1.0, abs=1e-8)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 12))
+def test_tau_star_monotone_decreasing_in_p(seed, n):
+    """Theorem 5: more batches never hurt — tau*(p) decreasing, and bracketed
+    by Theorem 6's closed-form supremum (p=1) and infimum (p->inf)."""
+    workers = _profile(seed, n)
+    r = 5000
+    taus = [bpcc_allocation(r, workers, p=p).tau for p in (1, 2, 4, 16, 64)]
+    for a, b in zip(taus, taus[1:]):
+        assert b <= a * (1.0 + 1e-12)
+    assert taus[0] == pytest.approx(tau_star_supremum(r, workers), rel=1e-9)
+    assert taus[-1] >= tau_star_infimum(r, workers) * (1.0 - 1e-9)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 12))
+def test_bpcc_loads_respect_batch_counts(seed, n):
+    """§3.2 repair loop: l_i >= p_i for the paper default p and huge p."""
+    workers = _profile(seed, n)
+    for p in (None, 7, 10_000):  # 10k forces the repair loop for small loads
+        alloc = bpcc_allocation(2000, workers, p=p)
+        assert (alloc.loads >= alloc.batches).all()
+        assert (alloc.batches >= 1).all()
+        assert alloc.total_rows >= 2000  # coded: redundancy never shrinks r
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_allocation_accepts_general_service_models(seed):
+    """Weibull/Pareto run Algorithm 1 via their shifted-exp surrogate; the
+    invariants hold and heavier tails never get more load than their
+    surrogate-identical lighter peers."""
+    g = rng(seed)
+    workers = [
+        ShiftedExp(mu=float(g.uniform(5, 50)), alpha=float(g.uniform(0.01, 0.1))),
+        Weibull(k=float(g.uniform(0.6, 2.0)), scale=float(g.uniform(0.01, 0.1)),
+                shift=float(g.uniform(0.01, 0.05))),
+        Pareto(xm=float(g.uniform(0.01, 0.05)), a=float(g.uniform(1.5, 4.0))),
+    ]
+    alloc = bpcc_allocation(3000, workers)
+    assert (alloc.loads >= alloc.batches).all()
+    assert np.isfinite(alloc.tau) and alloc.tau > 0
+
+
+def test_zero_shift_weibull_allocates_sanely():
+    """Regression: shift=0 Weibull (essential infimum 0) must not explode
+    the 1/alpha closed forms — the surrogate uses the 1% quantile as the
+    shift, and the p = ⌊ℓ̂⌋ default is capped at r (one row per batch)."""
+    workers = [Weibull(k=0.8, scale=2e-4), Weibull(k=1.5, scale=3e-4)]
+    sur = workers[0].to_shifted_exp()
+    assert sur.alpha >= workers[0].quantile(0.01, 1.0) * (1 - 1e-12)
+    alloc = bpcc_allocation(1000, workers)  # p=None default; must not hang
+    assert (alloc.batches <= 1000).all()    # the ⌊ℓ̂⌋ default is capped at r
+    assert (alloc.loads >= alloc.batches).all()
+    assert np.isfinite(alloc.tau) and alloc.tau > 0

@@ -2,6 +2,8 @@
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # wall-clock emulation: the CI slow job
+
 from repro.cluster import ClusterEmulator, StragglerPolicy, ec2_scenario
 from repro.core.distributions import estimate_parameters
 
@@ -62,6 +64,77 @@ def test_emulator_rows_by_time(small_task):
     s = res.rows_by_time(grid)
     assert (np.diff(s) >= 0).all()
     assert s[-1] == res.rows_received
+
+
+@pytest.mark.parametrize("code", ["lt", "gaussian"])
+def test_emulator_deterministic_across_runs(small_task, code):
+    """Two same-seed runs — threads and all — must be BIT-identical.
+
+    The master merges queue arrivals in model-time order behind a per-worker
+    watermark, so OS scheduling jitter cannot reorder consumption; arrivals,
+    rows_received and y are functions of the seed alone.
+    """
+    a, x = small_task
+    _, workers = ec2_scenario(1)
+    runs = []
+    for _ in range(2):
+        em = ClusterEmulator(workers, time_scale=0.3, seed=9)
+        runs.append(em.run_task(a, x, "bpcc", code=code))
+    r0, r1 = runs
+    assert r0.arrivals == r1.arrivals
+    assert r0.rows_received == r1.rows_received
+    assert r0.t_complete == r1.t_complete
+    assert np.array_equal(r0.y, r1.y)
+    # arrivals come out pre-sorted by model time (merged order)
+    ts = [t for t, _, _ in r0.arrivals]
+    assert ts == sorted(ts)
+
+
+@pytest.mark.parametrize("code", ["lt", "gaussian"])
+def test_emulator_streaming_overlaps_decode(small_task, code):
+    """Streaming mode: decode work moves out of the residual (t_decode) into
+    the overlapped ingest, and the master stops at the decoder's EXACT
+    decodability signal — never later than the terminal mode's r(1+eps)
+    rule of thumb.  Both modes consume the same deterministic merge (the
+    streaming arrival list is a prefix) and produce correct results."""
+    a, x = small_task
+    _, workers = ec2_scenario(1)
+    res_s = ClusterEmulator(workers, time_scale=0.5, seed=6).run_task(
+        a, x, "bpcc", code=code, streaming=True
+    )
+    res_t = ClusterEmulator(workers, time_scale=0.5, seed=6).run_task(
+        a, x, "bpcc", code=code, streaming=False
+    )
+    assert res_s.ok and res_t.ok
+    assert res_s.arrivals == res_t.arrivals[: len(res_s.arrivals)]
+    assert res_s.t_complete <= res_t.t_complete
+    assert res_s.rows_received <= res_t.rows_received
+    assert res_s.t_decode_ingest > 0.0       # work really was overlapped
+    assert res_t.t_decode_ingest == 0.0
+    ref = a @ x
+    tol = 2e-3 if code == "gaussian" else 1e-4
+    for res in (res_s, res_t):
+        assert np.abs(res.y - ref).max() / np.abs(ref).max() < tol
+
+
+def test_emulator_weibull_pareto_end_to_end(small_task):
+    """Heterogeneity beyond shifted-exp: allocate() (surrogate), the worker
+    rate draws, and the streaming decode all run with Weibull/Pareto models."""
+    from repro.core.distributions import Pareto, Weibull
+
+    a, x = small_task
+    workers = [
+        Weibull(k=0.8, scale=2e-4, shift=1e-4),
+        Pareto(xm=2e-4, a=3.0),
+        Weibull(k=1.5, scale=3e-4, shift=2e-4),
+        Pareto(xm=1.5e-4, a=2.2),
+    ]
+    em = ClusterEmulator(workers, time_scale=0.5, seed=3)
+    for scheme in ("bpcc", "load_balanced"):
+        res = em.run_task(a, x, scheme)
+        assert res.ok
+        ref = a @ x
+        assert np.abs(res.y - ref).max() / np.abs(ref).max() < 1e-4
 
 
 def test_parameter_estimation_from_emulator():

@@ -3,7 +3,10 @@ import numpy as np
 import pytest
 
 from repro.core.distributions import (
+    Pareto,
     ShiftedExp,
+    Weibull,
+    as_shifted_exp,
     estimate_parameters,
     sample_heterogeneous_cluster,
 )
@@ -55,3 +58,54 @@ def test_cluster_sampler_ranges():
     for w in ws:
         assert 1.0 <= w.mu <= 50.0
         assert w.alpha == pytest.approx(1.0 / w.mu)
+
+
+# --------------------------------------------------------------------------
+# heterogeneity beyond shifted-exp: Weibull / Pareto service-time models
+# --------------------------------------------------------------------------
+def test_weibull_model_properties():
+    w = Weibull(k=0.7, scale=0.2, shift=0.05)
+    rows = 80.0
+    assert w.cdf(rows * w.shift - 1e-9, rows) == 0.0
+    assert w.cdf(1e9, rows) == pytest.approx(1.0)
+    for p in (0.1, 0.5, 0.9):
+        assert w.cdf(w.quantile(p, rows), rows) == pytest.approx(p, abs=1e-9)
+    times = np.concatenate([w.sample_task_rate(seed, 500) for seed in range(40)])
+    assert times.min() >= w.shift
+    assert rows * times.mean() == pytest.approx(w.mean_time(rows), rel=0.05)
+
+
+def test_weibull_k1_is_shifted_exp():
+    """k = 1 collapses to the paper's model exactly (same CDF/mean)."""
+    w = Weibull(k=1.0, scale=0.25, shift=0.1)
+    se = ShiftedExp(mu=4.0, alpha=0.1)
+    t = np.linspace(0, 50, 200)
+    assert np.allclose(w.cdf(t, 30.0), se.cdf(t, 30.0))
+    assert w.mean_time(30.0) == pytest.approx(se.mean_time(30.0))
+    sur = w.to_shifted_exp()
+    assert sur.mu == pytest.approx(4.0) and sur.alpha == pytest.approx(0.1)
+
+
+def test_pareto_model_properties():
+    w = Pareto(xm=0.1, a=2.5)
+    rows = 40.0
+    assert w.cdf(rows * w.xm - 1e-9, rows) == 0.0
+    for p in (0.1, 0.5, 0.9):
+        assert w.cdf(w.quantile(p, rows), rows) == pytest.approx(p, abs=1e-9)
+    times = np.concatenate([w.sample_task_rate(seed, 500) for seed in range(40)])
+    assert times.min() >= w.xm
+    assert rows * times.mean() == pytest.approx(w.mean_time(rows), rel=0.05)
+    sur = w.to_shifted_exp()
+    assert sur.alpha == pytest.approx(w.xm)
+    # surrogate preserves the mean rate (shift + mean excess)
+    assert sur.alpha + 1.0 / sur.mu == pytest.approx(w.mean_rate())
+
+
+def test_model_validation():
+    with pytest.raises(ValueError):
+        Weibull(k=0.0, scale=1.0)
+    with pytest.raises(ValueError):
+        Weibull(k=1.0, scale=-1.0)
+    with pytest.raises(ValueError):
+        Pareto(xm=0.1, a=1.0)  # infinite mean
+    assert as_shifted_exp(ShiftedExp(mu=2.0, alpha=0.1)) == ShiftedExp(mu=2.0, alpha=0.1)

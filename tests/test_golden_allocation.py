@@ -1,0 +1,59 @@
+"""Golden-value regression: the paper Fig. 1-2 reproduction is PINNED.
+
+The fixture stores tau*(p), Algorithm-1 loads/batches, and the per-worker
+Eq. (7) roots for the §4.1.3 cluster.  Numerical refactors of the
+allocation stack (root finding, beta summation, repair loop) must not
+silently drift these values: loads are exact integers, continuous
+quantities match to 1e-9 relative (brentq/lambertw tolerance, not float
+round-off, is the contract).  Regenerate the fixture only for an
+intentional change (tests/fixtures/regen_golden_allocation.py).
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.allocation import bpcc_allocation, tau_star_infimum, tau_star_supremum
+from repro.core.distributions import ShiftedExp, sample_heterogeneous_cluster
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures", "golden_allocation.json")
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(FIXTURE) as f:
+        return json.load(f)
+
+
+def test_fixture_cluster_is_reproducible(golden):
+    """The seeded cluster itself must regenerate bit-exactly."""
+    workers = sample_heterogeneous_cluster(10, seed=0)
+    for w, ref in zip(workers, golden["workers"]):
+        assert w.mu == ref["mu"] and w.alpha == ref["alpha"]
+
+
+def test_golden_tau_and_loads(golden):
+    workers = [ShiftedExp(**w) for w in golden["workers"]]
+    r = golden["r"]
+    for cell in golden["grid"]:
+        alloc = bpcc_allocation(r, workers, p=cell["p"])
+        assert alloc.tau == pytest.approx(cell["tau"], rel=1e-9), cell["p"]
+        assert np.array_equal(alloc.loads, cell["loads"]), cell["p"]
+        assert np.array_equal(alloc.batches, cell["batches"]), cell["p"]
+        assert np.allclose(alloc.lams, cell["lams"], rtol=1e-9), cell["p"]
+
+
+def test_golden_theorem6_bounds(golden):
+    workers = [ShiftedExp(**w) for w in golden["workers"]]
+    r = golden["r"]
+    assert tau_star_supremum(r, workers) == pytest.approx(
+        golden["tau_supremum"], rel=1e-9
+    )
+    assert tau_star_infimum(r, workers) == pytest.approx(
+        golden["tau_infimum"], rel=1e-9
+    )
+    # Fig. 1's shape: every grid tau lies inside the Theorem 6 bracket
+    taus = [c["tau"] for c in golden["grid"]]
+    assert max(taus) <= golden["tau_supremum"] * (1 + 1e-9)
+    assert min(taus) >= golden["tau_infimum"] * (1 - 1e-9)

@@ -1,0 +1,218 @@
+"""Streaming partial decode (DESIGN.md §7): property-based bit-identity.
+
+The contract under fuzz: decoding a row stream batch by batch is a pure
+function of the ROW SEQUENCE — any chunking of the same stream is
+bit-identical to the one-shot decoder (``peel_decode_np`` / ``ls_decode_np``
+are single-ingest streaming runs) — and different arrival ORDERS recover the
+identical source set (peeling confluence) with results equal to ~1e-9.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # image without hypothesis: deterministic shim (minihyp)
+    from minihyp import given, settings, strategies as st
+
+from repro.core.decoding import (
+    StreamingDecoder,
+    StreamingLSDecoder,
+    StreamingLTDecoder,
+    first_decodable_mask,
+    ls_decode_np,
+    peel_decode_np,
+)
+from repro.core.encoding import GaussianCode, LTCode, encode_matrix, required_rows
+
+
+def _random_chunks(rng, n: int, max_chunk: int) -> list[slice]:
+    cuts, pos = [], 0
+    while pos < n:
+        k = int(rng.integers(1, max_chunk + 1))
+        cuts.append(slice(pos, min(pos + k, n)))
+        pos += k
+    return cuts
+
+
+# --------------------------------------------------------------------------
+# LT / peeling
+# --------------------------------------------------------------------------
+@settings(max_examples=12, deadline=None)
+@given(r=st.integers(8, 120), seed=st.integers(0, 10_000))
+def test_lt_streaming_bit_identical_to_oneshot(r, seed):
+    """Fuzz: random arrival order + random batch sizes == one-shot, bitwise."""
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((r, 3))
+    plan = LTCode(r=r, seed=seed).plan(required_rows(r, "lt") + 6)
+    coded = encode_matrix(a, plan)
+    order = rng.permutation(plan.q)
+    c, i, f = coded[order], plan.indices[order], plan.coeffs[order]
+
+    y1, ok1, n1 = peel_decode_np(c, i, f, r)  # one-shot on the arrival order
+    dec = StreamingLTDecoder(r)
+    for sl in _random_chunks(rng, plan.q, max_chunk=9):
+        dec.ingest(c[sl], i[sl], f[sl])
+    y2, ok2, n2 = dec.finalize()
+
+    assert (ok2, n2) == (ok1, n1)
+    assert np.array_equal(y2.astype(y1.dtype), y1)
+    if ok1:  # full received set + systematic prefix: decode is exact
+        assert np.allclose(y1, a, atol=1e-8)
+
+
+@settings(max_examples=8, deadline=None)
+@given(r=st.integers(16, 100), seed=st.integers(0, 10_000))
+def test_lt_arrival_orders_confluent(r, seed):
+    """Different arrival orders: identical recovered set, ~equal values."""
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((r, 2))
+    plan = LTCode(r=r, seed=seed).plan(required_rows(r, "lt") + 4)
+    coded = encode_matrix(a, plan)
+    results = []
+    for _ in range(3):
+        order = rng.permutation(plan.q)
+        dec = StreamingLTDecoder(r)
+        for sl in _random_chunks(rng, plan.q, max_chunk=7):
+            dec.ingest(coded[order][sl], plan.indices[order][sl], plan.coeffs[order][sl])
+        results.append(dec.finalize())
+    y0, ok0, n0 = results[0]
+    for y, ok, n in results[1:]:
+        assert (ok, n) == (ok0, n0)  # peeling to a fixpoint is confluent
+        assert np.allclose(y, y0, atol=1e-9)
+
+
+def test_lt_streaming_tracks_decodability_online():
+    """``decodable`` must flip exactly when recovery completes mid-stream."""
+    rng = np.random.default_rng(3)
+    r = 64
+    a = rng.standard_normal((r, 1))
+    plan = LTCode(r=r, seed=5).plan(2 * r)
+    coded = encode_matrix(a, plan)
+    dec = StreamingLTDecoder(r)
+    flipped_at = None
+    for j in range(plan.q):
+        dec.ingest(coded[j : j + 1], plan.indices[j : j + 1], plan.coeffs[j : j + 1])
+        if dec.decodable and flipped_at is None:
+            flipped_at = j + 1
+    assert flipped_at is not None
+    # one-shot on the same prefix confirms the online flip point
+    y, ok, _ = peel_decode_np(
+        coded[:flipped_at], plan.indices[:flipped_at], plan.coeffs[:flipped_at], r
+    )
+    assert ok and np.allclose(y, a, atol=1e-8)
+    # ... and the prefix one row shorter was NOT decodable
+    _, ok_prev, _ = peel_decode_np(
+        coded[: flipped_at - 1],
+        plan.indices[: flipped_at - 1],
+        plan.coeffs[: flipped_at - 1],
+        r,
+    )
+    assert not ok_prev
+
+
+# --------------------------------------------------------------------------
+# Gaussian / warm least squares
+# --------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(r=st.integers(16, 96), seed=st.integers(0, 10_000))
+def test_gaussian_streaming_bit_identical_to_oneshot(r, seed):
+    """Fuzz: random arrival order + random batch sizes == one-shot LS decode,
+    bitwise — including whether the warm-Cholesky/Woodbury path engaged."""
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(1, 4))
+    a = rng.standard_normal((r, m))
+    plan = GaussianCode(r=r, seed=seed).plan(int(r * 1.4) + 2)
+    g = plan.dense_generator()
+    coded = (g.astype(np.float64) @ a).astype(np.float64)
+    order = rng.permutation(plan.q)
+
+    y1, ok1, n1 = ls_decode_np(g[order], coded[order], block=16)
+    dec = StreamingLSDecoder(g, m, block=16)
+    for sl in _random_chunks(rng, plan.q, max_chunk=11):
+        dec.ingest(order[sl], coded[order[sl]])
+    y2, ok2, n2 = dec.finalize()
+
+    assert (ok2, n2) == (ok1, n1)
+    assert np.array_equal(y2, y1)
+    assert np.allclose(y2, a, atol=1e-5)
+
+
+def test_gaussian_finalize_is_pure_and_resumable():
+    """finalize() mid-stream, keep ingesting, finalize again — the executor's
+    retry pattern; the final answer must match the one-shot of all rows."""
+    rng = np.random.default_rng(0)
+    r, m = 48, 2
+    a = rng.standard_normal((r, m))
+    plan = GaussianCode(r=r, seed=1).plan(2 * r)
+    g = plan.dense_generator()
+    coded = (g.astype(np.float64) @ a).astype(np.float64)
+    dec = StreamingLSDecoder(g, m, block=16)
+    dec.ingest(np.arange(0, r - 5), coded[: r - 5])
+    y_early, ok_early, _ = dec.finalize()
+    assert not ok_early  # below the threshold
+    mid = dec.finalize()
+    assert np.array_equal(y_early, mid[0])  # pure: same state, same bits
+    dec.ingest(np.arange(r - 5, 2 * r), coded[r - 5 :])
+    y_full, ok_full, n = dec.finalize()
+    assert ok_full and n == 2 * r
+    want = ls_decode_np(g, coded, block=16)
+    assert np.array_equal(y_full, want[0])
+    assert np.allclose(y_full, a, atol=1e-6)
+
+
+def test_gaussian_warm_path_matches_cold_path():
+    """Woodbury-against-warm-factor == cold Gram Cholesky, to ~f64 accuracy."""
+    rng = np.random.default_rng(4)
+    r, m = 80, 1
+    a = rng.standard_normal((r, m))
+    plan = GaussianCode(r=r, seed=2).plan(int(r * 1.6))
+    g = plan.dense_generator()
+    coded = (g.astype(np.float64) @ a).astype(np.float64)
+    warm = StreamingLSDecoder(g, m, block=16, warm=True)
+    cold = StreamingLSDecoder(g, m, block=16, warm=False)
+    ids = np.arange(plan.q)
+    warm.ingest(ids, coded)
+    cold.ingest(ids, coded)
+    assert warm._chol is not None and cold._chol is None
+    yw, yc = warm.finalize()[0], cold.finalize()[0]
+    assert np.allclose(yw, yc, atol=1e-8)
+    assert np.allclose(yw, a, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# Plan facade + first-decodable mask
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("code", ["lt", "gaussian"])
+def test_streaming_decoder_facade_roundtrip(code):
+    rng = np.random.default_rng(7)
+    r, m = 72, 2
+    a = rng.standard_normal((r, m))
+    plan = (LTCode(r, seed=3) if code == "lt" else GaussianCode(r, seed=3)).plan(
+        int(r * 1.5)
+    )
+    coded = encode_matrix(a, plan).astype(np.float64)
+    dec = StreamingDecoder.for_plan(plan, nrhs=m)
+    order = rng.permutation(plan.q)
+    pos = 0
+    while pos < plan.q:
+        k = int(rng.integers(1, 13))
+        dec.ingest(order[pos : pos + k], coded[order[pos : pos + k]])
+        pos += k
+    assert dec.rows_ingested == plan.q
+    y, ok, _ = dec.finalize()
+    assert ok
+    assert np.allclose(y, a, atol=1e-5)
+
+
+def test_first_decodable_mask_keeps_earliest():
+    lat = np.array([5.0, 1.0, 2.0, 3.0, 4.0, 0.5])
+    m = first_decodable_mask(lat, n_data=4, n_parity=2)
+    assert np.array_equal(m, [0, 1, 1, 1, 0, 1])
+    # ties break stably by index
+    m = first_decodable_mask(np.zeros(6), n_data=4, n_parity=2)
+    assert np.array_equal(m, [1, 1, 1, 1, 0, 0])
+    # dead shards (inf) are dropped first; short clusters keep the finite set
+    m = first_decodable_mask(np.array([np.inf, 1, np.inf, 2, np.inf, 3]), 4, 2)
+    assert np.array_equal(m, [0, 1, 0, 1, 0, 1])
+    with pytest.raises(ValueError):
+        first_decodable_mask(np.zeros(5), 4, 2)

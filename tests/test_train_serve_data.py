@@ -130,6 +130,47 @@ def test_coded_engine_straggler_equivalence():
     assert outs[0] == outs[1]  # <=parity erasures never change the tokens
 
 
+def test_coded_engine_first_decodable_subset():
+    """latency_fn path: each step the engine keeps only the n_data
+    earliest-arriving shards (first decodable subset, a per-step-varying
+    mask through the mask-keyed DecoderCache) — tokens stay exact."""
+    cfg = CFG.scaled(coded=True, coded_parity=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    step_i = [0]
+
+    def latency_fn():  # per-shard arrival estimates, rotating laggards
+        step_i[0] += 1
+        lat = np.ones(16)
+        lat[(step_i[0] * 5) % 16] = 9.0
+        lat[(step_i[0] * 11) % 16] = 7.0
+        return lat
+
+    outs = []
+    for fn in (None, latency_fn):
+        eng = ServeEngine(model, params, n_slots=2, s_max=32, latency_fn=fn)
+        for i in range(3):
+            eng.submit(Request(uid=i, prompt=np.arange(4 + i) % 64, max_new_tokens=6))
+        outs.append({r.uid: r.out_tokens for r in eng.run()})
+    assert outs[0] == outs[1]  # dropping the slow parity-count never changes tokens
+
+    # dead shards (mask_fn zeros) are excluded before picking the fastest
+    def mask_fn():
+        m = np.ones(16)
+        m[3] = 0.0
+        return m
+
+    eng = ServeEngine(model, params, n_slots=1, s_max=32,
+                      latency_fn=lambda: np.zeros(16), mask_fn=mask_fn)
+    eng.submit(Request(uid=0, prompt=np.arange(4) % 64, max_new_tokens=4))
+    completed = eng.run()
+    assert len(completed) == 1 and len(completed[0].out_tokens) >= 4
+    # same prompt through the unmasked engine: tokens must agree (exactness)
+    eng_ref = ServeEngine(model, params, n_slots=1, s_max=32)
+    eng_ref.submit(Request(uid=0, prompt=np.arange(4) % 64, max_new_tokens=4))
+    assert completed[0].out_tokens == eng_ref.run()[0].out_tokens
+
+
 # ---------------------------------------------------------------- data
 def test_pipeline_deterministic_and_restartable():
     pipe = make_pipeline(CFG, seq=16, global_batch=4, seed=9)

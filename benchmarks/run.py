@@ -1,6 +1,11 @@
 """Benchmark driver: one block per paper table/figure + kernels + roofline.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only sim,ec2,...]
+
+Each block writes JSON artifacts under ``reports/bench/`` and prints a CSV
+summary; the paper-figure blocks are mapped figure-by-figure in
+docs/FIGURES.md.  ``--dry-run`` prints the resolved block list and the
+artifacts each would write, without running anything.
 """
 from __future__ import annotations
 
@@ -8,38 +13,57 @@ import argparse
 import sys
 import time
 
+# the single block registry: name -> (module under benchmarks/, artifacts).
+# --only validation, --dry-run, and execution all derive from this table.
+BLOCKS = {
+    "sim": ("paper_sim", "fig1..fig6 *.json (paper §4 simulation figures)"),
+    "ec2": ("paper_ec2", "fig8..fig11 *.json (paper §5 EC2 figures, emulated)"),
+    "kernels": ("kernels_bench", "kernels.json (Pallas kernel timings)"),
+    "decode": ("decode_bench", "BENCH_decode.json (DecoderCache / fused kernel / MC sweep)"),
+    "streaming": ("streaming_bench", "BENCH_streaming.json (residual vs terminal decode)"),
+    "adaptive": ("adaptive_bench", "BENCH_adaptive.json (static vs adaptive under drift/churn)"),
+    "roofline": ("roofline_bench", "(stdout only: roofline summaries)"),
+}
+
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true", help="reduced trial counts")
+    ap = argparse.ArgumentParser(
+        description="Run the benchmark blocks (paper figures + perf suites)",
+        formatter_class=argparse.ArgumentDefaultsHelpFormatter,
+    )
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced trial counts / grid sizes for CI")
     ap.add_argument("--only", default=None,
-                    help="comma list: sim,ec2,kernels,decode,streaming,roofline")
+                    help="comma list of blocks to run: "
+                         "sim,ec2,kernels,decode,streaming,adaptive,roofline")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="print the resolved block list and the artifacts "
+                         "each block writes, without executing")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+    if only:
+        unknown = only - set(BLOCKS)
+        if unknown:
+            ap.error(f"unknown block(s) {sorted(unknown)}; "
+                     f"options: {','.join(BLOCKS)}")
 
-    from benchmarks import (
-        decode_bench,
-        kernels_bench,
-        paper_ec2,
-        paper_sim,
-        roofline_bench,
-        streaming_bench,
-    )
+    if args.dry_run:
+        print(f"# --dry-run: blocks that would run (quick={args.quick}) "
+              f"-> reports/bench/")
+        for name, (_mod, art) in BLOCKS.items():
+            if only and name not in only:
+                continue
+            print(f"  {name}: {art}")
+        return
 
-    blocks = [
-        ("sim", paper_sim.run),        # Figs 1-6 (§4 simulation studies)
-        ("ec2", paper_ec2.run),        # Figs 8-11 (§5 EC2 experiments, emulated)
-        ("kernels", kernels_bench.run),
-        ("decode", decode_bench.run),  # DecoderCache / fused kernel / MC sweep
-        ("streaming", streaming_bench.run),  # residual vs terminal decode
-        ("roofline", roofline_bench.run),
-    ]
+    import importlib
+
     t0 = time.time()
-    for name, fn in blocks:
+    for name, (mod, _art) in BLOCKS.items():
         if only and name not in only:
             continue
         t = time.time()
-        fn(quick=args.quick)
+        importlib.import_module(f"benchmarks.{mod}").run(quick=args.quick)
         print(f"# [{name}] done in {time.time() - t:.1f}s", file=sys.stderr)
     print(f"# all benchmarks done in {time.time() - t0:.1f}s", file=sys.stderr)
 

@@ -12,5 +12,5 @@ from repro.cluster.profiles import (  # noqa: F401
     ec2_scenario,
     paper_sim_scenario,
 )
-from repro.cluster.straggler import StragglerPolicy  # noqa: F401
+from repro.cluster.straggler import ChurnPolicy, StragglerPolicy  # noqa: F401
 from repro.cluster.executor import ClusterEmulator, TaskResult  # noqa: F401

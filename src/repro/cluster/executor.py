@@ -30,6 +30,14 @@ swapped for injected latency:
 ``streaming=False`` restores the one-shot terminal decode at the threshold
 (the pre-streaming behaviour; benchmarks A/B the two paths).
 
+Adaptive mode (DESIGN.md §8): ``run_task(..., adaptive=ReallocationPolicy(),
+churn=ChurnSchedule(...))`` runs the same master merge over the trajectory of
+``core.adaptive.simulate_adaptive`` — reallocation epochs evaluated on the
+deterministic model-time watermark (an epoch decision sees exactly the
+arrivals the watermark has passed), monotone top-ups drawn from a reserve of
+extra coded rows encoded up front.  With ``adaptive=None`` and ``churn=None``
+the task takes the original static path, bit-identical to before.
+
 ``time_scale`` compresses emulated seconds into wall seconds so the full
 paper experiment grid runs in CI; all *reported* times are in model seconds.
 """
@@ -44,6 +52,12 @@ import numpy as np
 
 from repro.cluster.profiles import WorkerProfile
 from repro.cluster.straggler import StragglerPolicy
+from repro.core.adaptive import (
+    ChurnSchedule,
+    ReallocationPolicy,
+    control_margin,
+    simulate_adaptive,
+)
 from repro.core.allocation import Allocation, allocate
 from repro.core.decoding import StreamingDecoder, ls_decode_np, peel_decode_np
 from repro.core.encoding import (
@@ -74,6 +88,9 @@ class TaskResult:
     arrivals: list[tuple[float, int, int]] = field(default_factory=list)
     # (model_time, worker, rows) per received batch — E[S(t)] curves (Fig 9)
     t_decode_ingest: float = 0.0  # overlapped (pre-threshold) decode seconds
+    reallocations: list[dict] = field(default_factory=list)
+    # adaptive mode: one record per epoch that topped up (DESIGN.md §8)
+    rows_assigned: int = 0        # total coded rows assigned incl. top-ups
 
     def rows_by_time(self, t_grid: np.ndarray) -> np.ndarray:
         """S(t) on a grid, from the recorded arrival events."""
@@ -87,46 +104,43 @@ class TaskResult:
 
 
 class _Worker(threading.Thread):
-    """One emulated worker: real batch matvecs, model-scheduled returns."""
+    """One emulated worker: real batch matvecs, model-scheduled returns.
+
+    The worker executes an explicit event schedule (t_model, global_lo,
+    n_rows) — its slice of the master's precomputed batch-arrival algebra
+    (static: ``batch_arrival_schedule``; adaptive: ``simulate_adaptive``,
+    which folds in churn regime switches, deaths, joins and epoch top-ups).
+    Each batch is computed for real (numpy matmul on the coded rows) and
+    returned at its model-scheduled time.
+    """
 
     def __init__(
         self,
         wid: int,
-        rows: np.ndarray,          # this worker's coded rows [l_i, m]
-        row_offset: int,
+        events: list[tuple[float, int, int]],  # (t_model, global_lo, n_rows)
+        a_hat: np.ndarray,
         x: np.ndarray,
-        p: int,
-        rate: float,               # observed seconds-per-row this task
         out: queue.Queue,
         stop: threading.Event,
         t0: float,
         time_scale: float,
     ):
         super().__init__(daemon=True)
-        self.wid, self.rows, self.row_offset = wid, rows, row_offset
-        self.x, self.p, self.rate = x, max(1, min(p, len(rows) or 1)), rate
+        self.wid, self.events, self.a_hat, self.x = wid, events, a_hat, x
         self.out, self.stop, self.t0, self.time_scale = out, stop, t0, time_scale
 
     def run(self) -> None:
         try:
-            l = len(self.rows)
-            if l == 0:
-                return
-            b = -(-l // self.p)  # ceil — paper: every batch b_i rows, last may be short
-            for k in range(1, self.p + 1):
+            for t_model, lo, n in self.events:
                 if self.stop.is_set():
                     return
-                lo, hi = (k - 1) * b, min(k * b, l)
-                if lo >= hi:
-                    return
-                vals = self.rows[lo:hi] @ self.x          # the real compute
-                t_model = min(k * b, l) * self.rate        # Eq. (3) arrival of batch k
+                vals = self.a_hat[lo : lo + n] @ self.x   # the real compute
                 t_wall = self.t0 + t_model * self.time_scale
                 delay = t_wall - time.monotonic()
                 if delay > 0:
                     if self.stop.wait(timeout=delay):     # interruptible sleep
                         return
-                self.out.put((t_model, self.wid, lo + self.row_offset, vals))
+                self.out.put((t_model, self.wid, lo, vals))
         finally:
             # always announce completion so the master's watermark can pass
             # this worker, whatever exit path the thread took
@@ -162,10 +176,18 @@ class ClusterEmulator:
         overhead: float = 0.13,
         alloc: Allocation | None = None,
         streaming: bool = True,
+        adaptive: ReallocationPolicy | None = None,
+        churn: ChurnSchedule | None = None,
     ) -> TaskResult:
         """Distributed y = A x under ``scheme`` ('uniform' | 'load_balanced' |
         'hcmm' | 'bpcc').  ``streaming`` overlaps decode with arrivals via
-        ``StreamingDecoder``; False keeps the one-shot terminal decode."""
+        ``StreamingDecoder``; False keeps the one-shot terminal decode.
+
+        ``churn`` injects mid-task disturbances (rate regime switches, worker
+        death, late join); ``adaptive`` enables epoch-boundary reallocation
+        from the online rate posterior (monotone top-up from a reserve of
+        extra coded rows — DESIGN.md §8).  Both None: the original static
+        path, bit-identical to previous behaviour."""
         r, m = a.shape
         if x.shape[0] != m:
             raise ValueError(f"x has {x.shape[0]} entries, A has {m} columns")
@@ -186,13 +208,51 @@ class ClusterEmulator:
                 r_alloc = required_rows(r, "lt", overhead)
             alloc = allocate(scheme, r_alloc, models, **kw)
 
+        need = required_rows(r, "lt" if code == "lt" else "gaussian", overhead) \
+            if alloc.coded else r
+
+        # ---- realized rates: service-time draw x unexpected-straggler mult
+        rates = np.array(
+            [
+                mdl.sample_task_rate(derive(self.seed, "rate", task_id, i), 1)[0]
+                for i, mdl in enumerate(models)
+            ]
+        )
+        rates *= self.straggler.draw(len(models), derive(self.seed, "strag", task_id))
+
+        # ---- batch-arrival schedule: static merge, or the adaptive trace
+        # (reallocation epochs on the model-time watermark, DESIGN.md §8)
+        if adaptive is None and churn is None:
+            schedule = batch_arrival_schedule(alloc, rates)
+            capacity = int(alloc.total_rows)
+            reallocations: list[dict] = []
+        else:
+            reserve = 0
+            if adaptive is not None and adaptive.enabled and alloc.coded:
+                reserve = int(np.ceil(adaptive.reserve_frac * alloc.total_rows))
+            margin = (
+                control_margin(adaptive, code, overhead)
+                if adaptive is not None else None
+            )
+            trace = simulate_adaptive(
+                alloc, models, rates,
+                required=need,
+                capacity=alloc.total_rows + reserve,
+                churn=churn,
+                policy=adaptive,
+                required_margin=margin,
+            )
+            schedule = trace.events
+            capacity = max(int(alloc.total_rows), trace.capacity_used)
+            reallocations = trace.reallocations
+
         # ---- encode & distribute (pre-stored in the paper; excluded from T)
         if alloc.coded:
             plan = (
-                LTCode(r, seed=derive(self.seed, "code", task_id)).plan(alloc.total_rows)
+                LTCode(r, seed=derive(self.seed, "code", task_id)).plan(capacity)
                 if code == "lt"
                 else GaussianCode(r, seed=derive(self.seed, "code", task_id)).plan(
-                    alloc.total_rows
+                    capacity
                 )
             )
             # interleave coded rows across workers: a contiguous split would
@@ -208,32 +268,21 @@ class ClusterEmulator:
                 r=plan.r, q=plan.q, kind=plan.kind,
             )
             a_hat = encode_matrix(a, plan)
-            need = required_rows(r, plan.kind if code == "lt" else "gaussian", overhead)
         else:
             plan = None
             a_hat = a
-            need = r
-
-        offsets = np.concatenate([[0], np.cumsum(alloc.loads)])
-        # ---- realized rates: service-time draw x unexpected-straggler mult
-        rates = np.array(
-            [
-                mdl.sample_task_rate(derive(self.seed, "rate", task_id, i), 1)[0]
-                for i, mdl in enumerate(models)
-            ]
-        )
-        rates *= self.straggler.draw(len(models), derive(self.seed, "strag", task_id))
 
         out_q: queue.Queue = queue.Queue()
         stop = threading.Event()
         t0 = time.monotonic()
+        by_worker: dict[int, list[tuple[float, int, int]]] = {}
+        for t_ev, wid, lo, n in schedule:
+            by_worker.setdefault(wid, []).append((t_ev, lo, n))
         threads = []
         for i in range(len(models)):
-            lo, hi = int(offsets[i]), int(offsets[i + 1])
-            pw = int(alloc.batches[i])
             threads.append(
                 _Worker(
-                    i, a_hat[lo:hi], lo, x, pw, float(rates[i]),
+                    i, by_worker.get(i, []), a_hat, x,
                     out_q, stop, t0, self.time_scale,
                 )
             )
@@ -245,14 +294,16 @@ class ClusterEmulator:
         # (real systems keep draining the network rather than declaring
         # failure at r(1+eps))
         nrhs = 1 if x.ndim == 1 else x.shape[1]
-        got_rows = np.zeros(alloc.total_rows, dtype=bool)
-        buf = np.zeros((alloc.total_rows, nrhs), dtype=np.float64)
+        rows_arriving = int(sum(n for _t, _w, _lo, n in schedule))
+        got_rows = np.zeros(capacity, dtype=bool)
+        buf = np.zeros((capacity, nrhs), dtype=np.float64)
         arrivals: list[tuple[float, int, int]] = []
         rows_seen, t_complete = 0, np.inf
         deadline = t0 + 600.0  # hard wall-clock guard
         # the r(1+eps) rule of thumb can exceed what the allocation encoded
-        # (tight-redundancy grids); the drain target must stay reachable
-        target = min(need, alloc.total_rows)
+        # (tight-redundancy grids); the drain target must stay reachable —
+        # under churn only the rows that will actually arrive count
+        target = min(need, rows_arriving if rows_arriving else capacity)
         t_decode = 0.0
         t_ingest = 0.0
         y, ok = np.zeros((r, nrhs)), False
@@ -292,11 +343,11 @@ class ClusterEmulator:
             yy, okk, _ = decoder.finalize()
             return (yy, okk), time.perf_counter() - td0
 
-        # the master drew the rates, so every batch arrival (t_model, wid,
+        # the master drew the rates (and, in adaptive mode, precomputed the
+        # reallocation trajectory), so every batch arrival (t_model, wid,
         # row_lo, n_rows) is known a priori — consume the queue in exactly
-        # this merged order (ties broken by (t, wid, lo)); late queue
-        # deliveries park in ``pending`` until their turn
-        schedule = batch_arrival_schedule(alloc, rates)
+        # the merged ``schedule`` order (ties broken by (t, wid, lo)); late
+        # queue deliveries park in ``pending`` until their turn
         done = False
 
         rows_at_last_attempt = -1
@@ -330,7 +381,7 @@ class ClusterEmulator:
             rows_at_last_attempt = rows_seen
             if not ok:  # undecodable erasure pattern: drain more rows
                 target = min(
-                    alloc.total_rows, max(target + max(r // 50, 1), rows_seen + 1)
+                    rows_arriving, max(target + max(r // 50, 1), rows_seen + 1)
                 )
             return ok
 
@@ -374,4 +425,6 @@ class ClusterEmulator:
             scheme=scheme,
             arrivals=arrivals,
             t_decode_ingest=float(t_ingest),
+            reallocations=reallocations,
+            rows_assigned=int(capacity),  # initial loads + any top-ups
         )

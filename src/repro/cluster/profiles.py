@@ -16,7 +16,14 @@ import numpy as np
 
 from repro.core.distributions import ShiftedExp, sample_heterogeneous_cluster
 
-__all__ = ["WorkerProfile", "EC2_PROFILES", "ec2_scenario", "paper_sim_scenario"]
+__all__ = [
+    "WorkerProfile",
+    "EC2_PROFILES",
+    "ec2_scenario",
+    "paper_sim_scenario",
+    "churn_scenario",
+    "late_join_scenario",
+]
 
 
 @dataclass(frozen=True)
@@ -81,3 +88,43 @@ def paper_sim_scenario(idx: int, seed: int = 0) -> tuple[int, list[ShiftedExp]]:
     except KeyError:
         raise ValueError(f"scenario must be 1..4, got {idx}") from None
     return r, sample_heterogeneous_cluster(n, seed=seed)
+
+
+# --------------------------------------------------------------------------
+# Churn scenarios (DESIGN.md §8) — the §4.1.2 clusters + mid-task disturbances
+# --------------------------------------------------------------------------
+def churn_scenario(
+    idx: int,
+    *,
+    drift_mag: float = 2.0,
+    churn_rate: float = 0.3,
+    death_prob: float = 0.0,
+    seed: int = 0,
+):
+    """Paper §4.1.2 Scenario ``idx`` with mid-task churn:
+    (r, workers, ChurnPolicy).  Feed the policy's ``sample(n, tau, seed)``
+    to the executor/simulator as a per-task ``ChurnSchedule``."""
+    from repro.cluster.straggler import ChurnPolicy
+
+    r, workers = paper_sim_scenario(idx, seed=seed)
+    return r, workers, ChurnPolicy(
+        drift_prob=churn_rate, drift_mag=drift_mag, death_prob=death_prob
+    )
+
+
+def late_join_scenario(idx: int, *, join_frac: float = 0.3, seed: int = 0):
+    """Paper §4.1.2 Scenario ``idx`` where the LAST worker is absent from
+    the initial allocation and joins at ``join_frac`` × the static tau*:
+    (r, workers, initial Allocation over the others, ChurnSchedule with the
+    join event).  Only the adaptive reallocation loop can use the joiner —
+    the static assignment was fixed before it existed."""
+    from repro.core.adaptive import ChurnEvent, ChurnSchedule, padded_allocation
+    from repro.core.allocation import allocate
+
+    r, workers = paper_sim_scenario(idx, seed=seed)
+    sub = allocate("bpcc", r, workers[:-1])
+    alloc = padded_allocation(sub, np.arange(len(workers) - 1), len(workers))
+    churn = ChurnSchedule((
+        ChurnEvent(t=join_frac * sub.tau, worker=len(workers) - 1, kind="join"),
+    ))
+    return r, workers, alloc, churn

@@ -1,9 +1,16 @@
-"""Unexpected-straggler injection (paper §5.3.1).
+"""Unexpected-straggler injection (paper §5.3.1) + mid-task churn sampling.
 
 "the probability of a worker node to be a straggler is set to 0.2, and the
 straggler is emulated by delaying the return of computing results such that
 the computing time observed by the master node is three times of the actual
 computing time."
+
+``StragglerPolicy`` is the paper's disturbance: a per-task multiplicative
+slowdown drawn once, before the task starts.  ``ChurnPolicy`` extends the
+scenario space to *mid-task* disturbances (DESIGN.md §8): rate regime
+switches (drift), worker death, and late joins, sampled as a
+``core.adaptive.ChurnSchedule`` of model-time events that the static
+allocation cannot react to but the adaptive reallocation loop can.
 """
 from __future__ import annotations
 
@@ -11,9 +18,10 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.core.adaptive import ChurnEvent, ChurnSchedule
 from repro.utils.prng import rng as _rng
 
-__all__ = ["StragglerPolicy"]
+__all__ = ["StragglerPolicy", "ChurnPolicy"]
 
 
 @dataclass(frozen=True)
@@ -30,3 +38,62 @@ class StragglerPolicy:
         g = _rng(seed)
         hit = g.uniform(size=n_workers) < self.prob
         return np.where(hit, self.slowdown, 1.0)
+
+
+@dataclass(frozen=True)
+class ChurnPolicy:
+    """Random mid-task churn generator (drift regime switches + deaths).
+
+    Per worker, independently:
+      * with probability ``drift_prob`` the worker switches rate regime at a
+        time uniform in ``window`` (as fractions of the task horizon): with
+        probability ``speedup_frac`` its observed seconds-per-row becomes
+        1/(1 + drift_mag·U) of the base draw (a speedup), otherwise
+        (1 + drift_mag·U) times it (a slowdown), U ~ U[0.5, 1] so a sampled
+        drift is never vanishingly small;
+      * with probability ``death_prob`` the worker dies at a time uniform in
+        ``window`` — batches after that instant are lost, and the master is
+        never told (detection is the estimator's job, DESIGN.md §8).
+
+    ``sample`` draws one ``ChurnSchedule`` per (task, seed) realization with
+    a fixed per-worker stream order, so schedules are deterministic in the
+    seed exactly like every other draw in the framework.
+    """
+
+    drift_prob: float = 0.0
+    drift_mag: float = 2.0
+    speedup_frac: float = 0.25
+    death_prob: float = 0.0
+    window: tuple[float, float] = (0.1, 0.6)
+
+    def __post_init__(self):
+        if not 0.0 <= self.drift_prob <= 1.0 or not 0.0 <= self.death_prob <= 1.0:
+            raise ValueError(f"probabilities must be in [0, 1], got {self}")
+        if self.drift_mag < 0 or not 0.0 <= self.speedup_frac <= 1.0:
+            raise ValueError(f"bad churn policy {self}")
+        if not 0.0 <= self.window[0] < self.window[1]:
+            raise ValueError(f"bad churn window {self.window}")
+
+    def __bool__(self) -> bool:
+        return self.drift_prob > 0.0 or self.death_prob > 0.0
+
+    def sample(self, n_workers: int, horizon: float, seed: int) -> ChurnSchedule:
+        """One churn realization; ``horizon`` scales the event-time window
+        (pass the static allocation's tau*)."""
+        if horizon <= 0 or not np.isfinite(horizon):
+            raise ValueError(f"horizon must be positive/finite, got {horizon}")
+        g = _rng(seed)
+        w0, w1 = self.window
+        events: list[ChurnEvent] = []
+        for i in range(n_workers):
+            # fixed six-draw stream per worker keeps schedules seed-stable
+            u_d, u_t, u_mag, u_dir, u_death, u_td = g.uniform(size=6)
+            if self.drift_prob > 0.0 and u_d < self.drift_prob and self.drift_mag > 0:
+                t = horizon * (w0 + (w1 - w0) * u_t)
+                mag = 1.0 + self.drift_mag * (0.5 + 0.5 * u_mag)
+                factor = 1.0 / mag if u_dir < self.speedup_frac else mag
+                events.append(ChurnEvent(t=float(t), worker=i, kind="rate", factor=factor))
+            if self.death_prob > 0.0 and u_death < self.death_prob:
+                t = horizon * (w0 + (w1 - w0) * u_td)
+                events.append(ChurnEvent(t=float(t), worker=i, kind="death"))
+        return ChurnSchedule(tuple(events))

@@ -62,9 +62,20 @@ from repro.core.gradient_coding import (  # noqa: F401
     frc_code,
 )
 from repro.core.simulator import (  # noqa: F401
+    AdaptiveSimResult,
     SimResult,
     accumulation_curve,
     completion_time,
     sample_rates,
+    simulate_adaptive_scheme,
     simulate_scheme,
+)
+from repro.core.adaptive import (  # noqa: F401
+    ChurnEvent,
+    ChurnSchedule,
+    EstimatorConfig,
+    OnlineRateEstimator,
+    ParityController,
+    ReallocationPolicy,
+    simulate_adaptive,
 )

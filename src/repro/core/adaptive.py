@@ -1,0 +1,691 @@
+"""Adaptive BPCC: online rate estimation + mid-task reallocation (DESIGN.md §8).
+
+The paper's allocation (Algorithm 1) is computed once, from *prior* rate
+parameters, and never revisited: a worker whose rate drifts after allocation
+degrades t_complete exactly like the uncoded baseline.  But BPCC's batch
+granularity is precisely the online signal that makes mid-task correction
+possible — the master observes per-worker batch inter-arrival times *during*
+the task.  This module turns that signal into a control loop:
+
+  * ``OnlineRateEstimator`` — per-worker sufficient statistics over observed
+    batch inter-arrival rates (decayed count / sum / relaxed minimum), with a
+    conjugate-style prior blend: the posterior for a worker with no
+    observations is its nominal profile, and the posterior converges to the
+    realized rate as arrivals accumulate.  Non-shifted-exp priors
+    (Weibull/Pareto) enter through their ``as_shifted_exp`` surrogate, and
+    the posterior shift respects the surrogate quantile floor (alpha never
+    collapses below ``floor_quantile``×mean — the same 1%-quantile idiom as
+    ``distributions.Weibull.to_shifted_exp``), so Eq. (18)/(20) stay finite.
+  * ``ChurnSchedule`` — mid-task disturbances as model-time events: rate
+    regime switches (slowdown/speedup multipliers), worker death, late join.
+  * ``ReallocationPolicy`` — at model-time epoch boundaries the master
+    re-solves Algorithm 1 from the posterior rates for the rows still
+    needed, and **tops up** workers whose posterior-optimal share exceeds
+    their undelivered backlog with fresh coded rows from a reserve pool.
+    The top-up is MONOTONE: rows already distributed are never clawed back,
+    so every statically-scheduled arrival happens identically and decode
+    correctness (which depends only on the received row set) is untouched.
+  * ``simulate_adaptive`` — the pure model-time event engine shared by the
+    cluster emulator and the Monte-Carlo simulator, so the two can never
+    drift apart.  With the policy off and no churn it reproduces
+    ``batch_arrival_schedule`` bit-for-bit.
+  * ``ParityController`` — the serving-side consumer: a per-shard straggler
+    posterior from recent latency observations picks the parity level
+    (how many laggards to drop) per decode step.
+
+Information discipline (who may know what): the engine *generates* arrivals
+from the realized rates and the churn schedule, but the estimator/policy see
+only (a) arrivals with t <= the epoch boundary (the executor's model-time
+watermark), (b) join events — cluster membership is control-plane
+information, and (c) censored silence — "no batch for longer than
+``stale_factor`` × expected" is itself an observation, which is how deaths
+and severe slowdowns are detected without an oracle.
+"""
+from __future__ import annotations
+
+from bisect import bisect_right
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.allocation import Allocation, allocate
+from repro.core.distributions import ShiftedExp, as_shifted_exp
+
+__all__ = [
+    "EstimatorConfig",
+    "OnlineRateEstimator",
+    "ChurnEvent",
+    "ChurnSchedule",
+    "ReallocationPolicy",
+    "AdaptiveTrace",
+    "simulate_adaptive",
+    "control_margin",
+    "padded_allocation",
+    "ParityController",
+]
+
+_ALPHA_FLOOR = 1e-12
+_EXCESS_FLOOR = 1e-9   # relative floor on (mean - alpha): keeps mu finite
+_MU_ALPHA_CAP = 50.0   # posterior mu*alpha ceiling (paper range is ~1)
+
+
+# --------------------------------------------------------------------------
+# Online rate estimation
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class EstimatorConfig:
+    """Knobs of the per-worker rate posterior.
+
+    decay          — per-epoch forgetting on the sufficient statistics; 1.0
+                     is the stationary (no-drift) MLE, lower tracks regime
+                     switches faster at the cost of variance.
+    prior_count    — pseudo-observations the nominal profile contributes;
+                     the posterior mean is the precision-weighted blend.
+    floor_quantile — the posterior shift alpha never drops below this
+                     fraction of the posterior mean rate (the Weibull
+                     shift-0 surrogate idiom: keeps ℓ̂ ~ 1/alpha finite).
+    stale_factor   — a worker silent for longer than this multiple of its
+                     expected next-batch time yields a censored observation.
+    """
+
+    decay: float = 0.8
+    prior_count: float = 2.0
+    floor_quantile: float = 0.01
+    stale_factor: float = 2.0
+
+    def __post_init__(self):
+        if not 0.0 < self.decay <= 1.0:
+            raise ValueError(f"decay must be in (0, 1], got {self.decay}")
+        if self.prior_count < 0 or self.stale_factor <= 0:
+            raise ValueError(f"bad estimator config {self}")
+        if not 0.0 <= self.floor_quantile < 1.0:
+            raise ValueError(f"floor_quantile must be in [0, 1), got {self}")
+
+
+class OnlineRateEstimator:
+    """Sufficient-statistics posterior over per-worker seconds-per-row.
+
+    Observations are effective rates of completed batches: for a batch of
+    ``rows`` rows whose processing spanned [t_start, t_arrival], the
+    observation is (t_arrival - t_start) / rows — under the paper's model
+    (Eq. 3) an i.i.d. draw of alpha + X/mu within one rate regime.
+
+    Statistics per worker (exponentially forgotten by ``decay()``):
+      n    — decayed observation count (weighted by rows: a 100-row batch
+             pins the rate harder than a 1-row batch),
+      s    — decayed rows-weighted sum of observed rates,
+      m    — relaxed running minimum: new observations pull it down hard,
+             ``decay()`` relaxes it toward the current mean so an upward
+             alpha drift is eventually forgotten too.
+
+    ``posterior(i)`` maps the statistics to a ShiftedExp by the §5.2
+    moment/MLE correspondence — alpha from the (prior-blended, shrunk)
+    minimum, mu from 1/(mean excess) — with the quantile floor applied.
+    """
+
+    def __init__(self, priors: list[ShiftedExp], cfg: EstimatorConfig | None = None):
+        self.cfg = cfg or EstimatorConfig()
+        self.priors = [as_shifted_exp(w) for w in priors]
+        n = len(self.priors)
+        self._n = np.zeros(n)
+        self._s = np.zeros(n)
+        self._m = np.full(n, np.inf)
+
+    @property
+    def n_workers(self) -> int:
+        return len(self.priors)
+
+    def observe(self, worker: int, seconds_per_row: float, rows: float = 1.0) -> None:
+        """One completed-batch rate observation, weighted by its row count."""
+        if seconds_per_row <= 0 or rows <= 0:
+            raise ValueError("rate and rows must be positive")
+        self._n[worker] += rows
+        self._s[worker] += rows * seconds_per_row
+        self._m[worker] = min(self._m[worker], seconds_per_row)
+
+    def observe_censored(self, worker: int, elapsed_spr: float, rows: float = 1.0) -> None:
+        """Silence as signal: the next batch has NOT arrived after
+        ``elapsed_spr`` seconds-per-expected-row, so the current rate is at
+        least that.  Fed as a plain observation at the lower bound (biased
+        low for the true rate — conservative), but only when it would raise
+        the posterior mean; a censored bound below the mean carries no
+        information the arrivals didn't."""
+        if elapsed_spr > self.mean_rate(worker):
+            # the bound must not drag the minimum (shift) statistic down
+            self._n[worker] += rows
+            self._s[worker] += rows * elapsed_spr
+
+    def decay(self) -> None:
+        """One epoch of forgetting; relaxes the minimum toward the mean."""
+        d = self.cfg.decay
+        if d >= 1.0:
+            return
+        have = self._n > 0
+        mean = np.where(have, self._s / np.maximum(self._n, 1e-300), 0.0)
+        self._n *= d
+        self._s *= d
+        relax = np.isfinite(self._m) & have
+        self._m[relax] += (1.0 - d) * (mean[relax] - self._m[relax])
+
+    def mean_rate(self, worker: int) -> float:
+        """Posterior mean seconds-per-row (prior-blended)."""
+        w = self.priors[worker]
+        c = self.cfg.prior_count
+        prior_rate = w.alpha + 1.0 / w.mu
+        return float(
+            (self._s[worker] + c * prior_rate) / (self._n[worker] + c)
+            if (self._n[worker] + c) > 0
+            else prior_rate
+        )
+
+    def rates(self) -> np.ndarray:
+        return np.array([self.mean_rate(i) for i in range(self.n_workers)])
+
+    def posterior(self, worker: int) -> ShiftedExp:
+        w = self.priors[worker]
+        c = self.cfg.prior_count
+        n = self._n[worker]
+        mean = self.mean_rate(worker)
+        m = self._m[worker] if np.isfinite(self._m[worker]) else w.alpha
+        # precision-weighted shrink of the observed minimum toward the prior
+        # shift; the min of n exponentials overshoots alpha by ~1/(n mu), so
+        # the prior pull doubles as a small-sample bias guard
+        alpha = (n * m + c * w.alpha) / max(n + c, 1e-300)
+        alpha = max(alpha, self.cfg.floor_quantile * mean, _ALPHA_FLOOR)
+        alpha = min(alpha, mean * (1.0 - _EXCESS_FLOOR))
+        excess = max(mean - alpha, _EXCESS_FLOOR * mean, 1e-300)
+        # cap mu*alpha: near-deterministic observations would send the
+        # straggle rate to infinity and underflow Eq. (9)'s Lambert-W branch
+        mu = min(1.0 / excess, _MU_ALPHA_CAP / alpha)
+        return ShiftedExp(mu=mu, alpha=alpha)
+
+    def posteriors(self) -> list[ShiftedExp]:
+        return [self.posterior(i) for i in range(self.n_workers)]
+
+
+# --------------------------------------------------------------------------
+# Churn: mid-task disturbances in model time
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ChurnEvent:
+    """One disturbance: at model time ``t`` worker ``worker`` ...
+
+    kind="rate"  — switches to a new rate regime: observed seconds-per-row
+                   becomes ``factor`` × the base realized rate (factor > 1
+                   is a slowdown; REPLACES any earlier multiplier),
+    kind="death" — stops producing forever (in-flight batches after t are
+                   lost; the master is NOT told — it must infer),
+    kind="join"  — becomes available (a worker with join > 0 processes
+                   nothing earlier; joins are control-plane information the
+                   master does see).
+    """
+
+    t: float
+    worker: int
+    kind: str
+    factor: float = 1.0
+
+    def __post_init__(self):
+        if self.kind not in ("rate", "death", "join"):
+            raise ValueError(f"unknown churn kind {self.kind!r}")
+        if self.t < 0 or (self.kind == "rate" and self.factor <= 0):
+            raise ValueError(f"bad churn event {self}")
+
+
+@dataclass(frozen=True)
+class ChurnSchedule:
+    """A set of churn events for one task realization."""
+
+    events: tuple[ChurnEvent, ...] = ()
+
+    def __bool__(self) -> bool:
+        return len(self.events) > 0
+
+    def timeline(self, n_workers: int):
+        """Per-worker piecewise-constant view: (join[n], death[n],
+        times[i] ascending breakpoint list, mults[i] multiplier from each
+        breakpoint on).  times[i][0] is always 0.0 with multiplier 1.0."""
+        join = np.zeros(n_workers)
+        death = np.full(n_workers, np.inf)
+        times = [[0.0] for _ in range(n_workers)]
+        mults = [[1.0] for _ in range(n_workers)]
+        for ev in sorted(self.events, key=lambda e: (e.t, e.worker, e.kind)):
+            if ev.worker < 0 or ev.worker >= n_workers:
+                raise ValueError(f"churn event for unknown worker: {ev}")
+            if ev.kind == "rate":
+                times[ev.worker].append(ev.t)
+                mults[ev.worker].append(ev.factor)
+            elif ev.kind == "death":
+                death[ev.worker] = min(death[ev.worker], ev.t)
+            else:  # join
+                join[ev.worker] = max(join[ev.worker], ev.t)
+        return join, death, times, mults
+
+
+# --------------------------------------------------------------------------
+# Reallocation policy
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ReallocationPolicy:
+    """Epoch-boundary monotone top-up from posterior rates.
+
+    enabled        — master switch; False runs the engine with churn but no
+                     adaptation (the static comparator).
+    epoch_frac     — epoch length as a fraction of the static allocation's
+                     predicted tau* (absolute fallback when tau is nan).
+    reserve_frac   — extra coded rows encoded up front for top-ups, as a
+                     fraction of the static allocation's total.
+    scheme         — the allocation re-solved at each epoch (Algorithm 1:
+                     'bpcc', or its p=1 restriction 'hcmm').
+    min_topup_frac — hysteresis: a threshold shortfall smaller than this
+                     fraction of the rows still needed is ignored (keeps
+                     the no-drift case from churning rows on noise).
+    topup_margin   — assign this fraction more than the computed shortfall
+                     (coded rows are cheap; a second-guess epoch is not).
+    threshold_margin — the control loop aims for (1 + this) × the recovery
+                     threshold.  Rows a dead worker never delivers are a
+                     *non-uniform* erasure (e.g. they take systematic LT
+                     rows with them), so the count threshold alone can
+                     leave an undecodable received set; the executor raises
+                     this to 2×eps for LT codes.
+    max_epochs     — hard bound on control iterations.
+    estimator      — posterior configuration (see EstimatorConfig).
+    """
+
+    enabled: bool = True
+    epoch_frac: float = 0.125
+    reserve_frac: float = 0.5
+    scheme: str = "bpcc"
+    min_topup_frac: float = 0.02
+    topup_margin: float = 0.25
+    threshold_margin: float = 0.1
+    max_epochs: int = 256
+    estimator: EstimatorConfig = field(default_factory=EstimatorConfig)
+
+    def __post_init__(self):
+        if self.epoch_frac <= 0 or self.reserve_frac < 0 or self.max_epochs < 1:
+            raise ValueError(f"bad policy {self}")
+        if self.scheme not in ("bpcc", "hcmm"):
+            raise ValueError(f"reallocation scheme must be bpcc|hcmm, got {self.scheme}")
+        if self.min_topup_frac < 0 or self.topup_margin < 0 or self.threshold_margin < 0:
+            raise ValueError(f"bad policy {self}")
+
+
+def control_margin(policy: ReallocationPolicy, code_kind: str, overhead: float) -> float:
+    """The control loop's threshold margin for a code family — THE single
+    definition both the executor and the simulator use, so the two adaptive
+    trajectories cannot drift apart.  LT peeling under permanent row loss
+    sees a non-uniform erasure (lost systematic rows must be re-derived
+    from soliton rows), so LT aims 2x the code's eps above the count
+    threshold; dense codes decode from any r rows and keep the policy's
+    own margin."""
+    if code_kind in ("lt", "systematic_lt"):
+        return max(policy.threshold_margin, 2.0 * overhead)
+    return policy.threshold_margin
+
+
+def padded_allocation(alloc: Allocation, active: np.ndarray, n_workers: int) -> Allocation:
+    """Scatter an allocation over ``active`` worker indices into an
+    n_workers-wide one (zeros elsewhere) — late-join scenarios and the
+    known-rates oracle allocate over a subset of the cluster."""
+    loads = np.zeros(n_workers, dtype=np.int64)
+    batches = np.ones(n_workers, dtype=np.int64)
+    loads[np.asarray(active)] = alloc.loads
+    batches[np.asarray(active)] = alloc.batches
+    return Allocation(
+        loads=loads, batches=batches, tau=alloc.tau, scheme=alloc.scheme,
+        coded=alloc.coded,
+    )
+
+
+# --------------------------------------------------------------------------
+# The model-time event engine
+# --------------------------------------------------------------------------
+@dataclass
+class AdaptiveTrace:
+    """Full deterministic trajectory of one (static or adaptive) task.
+
+    events        — (t_model, worker, global_row_lo, n_rows) per batch that
+                    actually arrives, sorted by (t, worker, lo): exactly the
+                    merged order the executor's watermark master consumes.
+    t_complete    — earliest event time with cumulative rows >= required
+                    (np.inf if the assignment can never deliver enough —
+                    e.g. deaths under the static policy).
+    rows_assigned — final per-worker totals, initial loads + top-ups.
+    topup_rows    — total reserve rows handed out.
+    capacity_used — highest global row index assigned + 1 (what must be
+                    encoded).
+    reallocations — one record per epoch that changed the assignment.
+    required      — the recovery threshold the trace was run against.
+    """
+
+    events: list[tuple[float, int, int, int]]
+    t_complete: float
+    rows_assigned: np.ndarray
+    topup_rows: int
+    capacity_used: int
+    reallocations: list[dict]
+    required: int
+
+
+class _WorkerStream:
+    """One worker's assigned chunks expanded into batch-arrival arrays.
+
+    Chunks are processed sequentially; a chunk assigned at an epoch starts
+    at max(worker-free time, epoch time, join).  Expansion is vectorized
+    over the chunk's batch boundaries and is EXACT for the static case:
+    with no churn the arrival of cumulative row c is 0.0 + c*rate — the
+    same float product ``batch_arrival_schedule`` sorts.
+    """
+
+    def __init__(self, wid, rate, join, death, times, mults):
+        self.wid = wid
+        self.rate = float(rate)
+        self.join = float(join)
+        self.death = float(death)
+        self.times = times   # ascending breakpoints, times[0] == 0.0
+        self.mults = mults
+        self.free_t = self.join       # when the worker can start new work
+        self.assigned = 0             # rows assigned (master view)
+        self.t = np.empty(0)          # batch arrival times (inf = lost)
+        self.t_start = np.empty(0)    # when each batch began processing
+        self.lo = np.empty(0, np.int64)
+        self.n = np.empty(0, np.int64)
+        self.obs_ptr = 0              # estimator feed position
+
+    def add_chunk(self, lo: int, n_rows: int, b: int, t_assign: float) -> None:
+        """Append ``n_rows`` rows at global offset ``lo``, streamed back in
+        batches of ``b`` (last batch short), processing from
+        max(free time, t_assign, join)."""
+        self.assigned += n_rows
+        s0 = max(self.free_t, t_assign, self.join)
+        ks = np.arange(1, -(-n_rows // b) + 1, dtype=np.float64)
+        hi = np.minimum(ks * b, float(n_rows))          # within-chunk cum rows
+        if not np.isfinite(s0) or s0 >= self.death:
+            arr = np.full(len(hi), np.inf)
+            starts = np.full(len(hi), np.inf)
+            # the MASTER still expects processing from the assignment time —
+            # a finite first-batch start is what lets censor() notice that a
+            # worker which died while idle never delivers its top-up
+            starts[0] = max(t_assign, self.join)
+            self.free_t = np.inf
+        else:
+            arr, starts = self._arrivals(s0, hi)
+            self.free_t = arr[-1] if np.isfinite(arr[-1]) else np.inf
+        lo_arr = lo + np.concatenate([[0.0], hi[:-1]]).astype(np.int64)
+        n_arr = np.diff(np.concatenate([[0.0], hi])).astype(np.int64)
+        self.t = np.concatenate([self.t, arr])
+        self.t_start = np.concatenate([self.t_start, starts])
+        self.lo = np.concatenate([self.lo, lo_arr])
+        self.n = np.concatenate([self.n, n_arr])
+
+    def _arrivals(self, s0: float, hi: np.ndarray):
+        """Arrival time of each cumulative row target in ``hi`` for a busy
+        period starting at s0, under the piecewise rate multipliers."""
+        j0 = bisect_right(self.times, s0) - 1
+        ts = [s0]
+        sprs = [self.rate * self.mults[j0]]
+        for j in range(j0 + 1, len(self.times)):
+            if self.times[j] >= self.death:
+                break
+            ts.append(self.times[j])
+            sprs.append(self.rate * self.mults[j])
+        rows_cum = [0.0]
+        for i in range(1, len(ts)):
+            rows_cum.append(rows_cum[-1] + (ts[i] - ts[i - 1]) / sprs[i - 1])
+        rows_max = np.inf
+        if np.isfinite(self.death):
+            rows_max = rows_cum[-1] + (self.death - ts[-1]) / sprs[-1]
+        ts_a, cum_a, spr_a = map(np.asarray, (ts, rows_cum, sprs))
+        k = np.clip(np.searchsorted(cum_a, hi, side="right") - 1, 0, len(ts_a) - 1)
+        arr = ts_a[k] + (hi - cum_a[k]) * spr_a[k]
+        arr = np.where(hi <= rows_max, arr, np.inf)
+        starts = np.concatenate([[s0], arr[:-1]])
+        return arr, starts
+
+    # ---- master-visible views ------------------------------------------
+    def delivered_by(self, t_e: float) -> int:
+        idx = int(np.searchsorted(self.t, t_e, side="right"))
+        return int(self.n[:idx].sum())
+
+    def feed_estimator(self, est: OnlineRateEstimator, t_e: float) -> None:
+        """Feed completed-batch rate observations with arrival <= t_e."""
+        idx = int(np.searchsorted(self.t, t_e, side="right"))
+        for k in range(self.obs_ptr, idx):
+            span = self.t[k] - self.t_start[k]
+            if span > 0 and self.n[k] > 0:
+                est.observe(self.wid, span / self.n[k], rows=float(self.n[k]))
+        self.obs_ptr = idx
+
+    def censor(self, est: OnlineRateEstimator, t_e: float) -> None:
+        """Silence check: pending next batch overdue at t_e -> censored obs.
+
+        The evidence weight is the number of rows the worker SHOULD have
+        delivered during the silence at its posterior mean rate (capped at
+        its backlog) — one overdue 1-row batch after 100 expected-row times
+        is 100 rows' worth of evidence, not 1, which is what lets a death
+        or a hard slowdown overcome a long rows-weighted history quickly."""
+        idx = int(np.searchsorted(self.t, t_e, side="right"))
+        if idx >= len(self.t):
+            return
+        start = self.t_start[idx]
+        if not np.isfinite(start) or start > t_e:
+            return
+        rows = float(max(self.n[idx], 1))
+        elapsed_spr = (t_e - start) / rows
+        mean = est.mean_rate(self.wid)
+        if elapsed_spr > est.cfg.stale_factor * mean:
+            backlog = float(self.assigned - int(self.n[:idx].sum()))
+            weight = min(max((t_e - start) / max(mean, 1e-300), rows), backlog)
+            est.observe_censored(self.wid, elapsed_spr, rows=weight)
+
+    def has_pending(self, t_e: float) -> bool:
+        idx = int(np.searchsorted(self.t, t_e, side="right"))
+        return bool(np.isfinite(self.t[idx:]).any())
+
+
+def _merged_events(streams: list[_WorkerStream]):
+    """All finite arrivals merged in (t, worker, lo) order + cumulative rows."""
+    ts = np.concatenate([s.t for s in streams])
+    wid = np.concatenate([np.full(len(s.t), s.wid, np.int64) for s in streams])
+    lo = np.concatenate([s.lo for s in streams])
+    n = np.concatenate([s.n for s in streams])
+    fin = np.isfinite(ts)
+    ts, wid, lo, n = ts[fin], wid[fin], lo[fin], n[fin]
+    order = np.lexsort((lo, wid, ts))
+    return ts[order], wid[order], lo[order], n[order]
+
+
+def simulate_adaptive(
+    alloc: Allocation,
+    workers: list,
+    rates: np.ndarray,
+    *,
+    required: int,
+    capacity: int | None = None,
+    churn: ChurnSchedule | None = None,
+    policy: ReallocationPolicy | None = None,
+    required_margin: float | None = None,
+) -> AdaptiveTrace:
+    """Deterministic model-time trajectory of one task — static or adaptive.
+
+    alloc    — the t=0 allocation (from the *prior* worker models).
+    workers  — prior service-time models (estimator priors; any family).
+    rates    — realized base seconds-per-row per worker (one draw per task,
+               the paper's model), BEFORE churn multipliers.
+    required — coded-row recovery threshold (r(1+eps) for LT, r for dense).
+    capacity — total encodable rows; rows beyond ``alloc.total_rows`` form
+               the top-up reserve.  Default: no reserve.
+    churn    — mid-task disturbances (None = stationary).
+    policy   — reallocation policy; None or ``enabled=False`` gives the
+               static trajectory (initial chunks only).
+    required_margin — override for ``policy.threshold_margin`` (the control
+               loop's target is required × (1 + margin); ``t_complete``
+               always measures the true ``required`` crossing).
+
+    Monotonicity: the adaptive trajectory contains every static arrival at
+    the identical time (top-ups only append work), so
+    ``t_complete(adaptive) <= t_complete(static)`` trial by trial.
+
+    Bit-identity: with no churn and no policy the event list equals
+    ``batch_arrival_schedule(alloc, rates)`` exactly (same float products,
+    same (t, worker, lo) tie-break) — asserted in tests/test_adaptive.py.
+    """
+    n_workers = len(alloc.loads)
+    if len(rates) != n_workers or len(workers) != n_workers:
+        raise ValueError("alloc/workers/rates disagree on worker count")
+    capacity = int(capacity if capacity is not None else alloc.total_rows)
+    if capacity < alloc.total_rows:
+        raise ValueError("capacity below the initial allocation's total")
+    join, death, times, mults = (churn or ChurnSchedule()).timeline(n_workers)
+
+    offsets = np.concatenate([[0], np.cumsum(alloc.loads)])
+    streams = []
+    for i in range(n_workers):
+        s = _WorkerStream(i, rates[i], join[i], death[i], times[i], mults[i])
+        l, p = int(alloc.loads[i]), int(alloc.batches[i])
+        if l > 0:
+            pw = max(1, min(p, l))
+            s.add_chunk(int(offsets[i]), l, -(-l // pw), t_assign=0.0)
+        streams.append(s)
+
+    reserve_cursor = int(alloc.total_rows)
+    reallocations: list[dict] = []
+    adapting = policy is not None and policy.enabled and alloc.coded
+    if adapting:
+        margin = policy.threshold_margin if required_margin is None else required_margin
+        target = int(np.ceil(required * (1.0 + margin)))
+        priors = [as_shifted_exp(w) for w in workers]
+        est = OnlineRateEstimator(priors, policy.estimator)
+        tau0 = alloc.tau
+        if not np.isfinite(tau0):
+            tau0 = float(np.max(alloc.loads * np.array([w.alpha + 1.0 / w.mu for w in priors])))
+        epoch_len = policy.epoch_frac * tau0
+        for e in range(1, policy.max_epochs + 1):
+            t_e = e * epoch_len
+            received = sum(s.delivered_by(t_e) for s in streams)
+            if received >= target:
+                break
+            est.decay()
+            for s in streams:
+                s.feed_estimator(est, t_e)
+                s.censor(est, t_e)
+            r_rem = target - received
+            active = np.flatnonzero(join <= t_e)  # joins are control-plane
+            avail = capacity - reserve_cursor
+            if len(active) == 0 or avail <= 0:
+                if not any(s.has_pending(t_e) for s in streams):
+                    break
+                continue
+            # Re-solve Algorithm 1 for the rows still needed from the
+            # posterior rates: tau_f = fresh.tau is the posterior-optimal
+            # remaining completion, the deadline the top-up aims at.  Each
+            # worker can deliver cap_i = tau_f / mean_rate_i rows by that
+            # deadline (the mean-rate projection — Eq. (14)'s d_i = tau/λ_i
+            # carries the w.h.p. straggling margin and would over-credit
+            # slow workers).  Backlog beyond cap_i arrives too late to
+            # count, so the threshold shortfall at the deadline is
+            #   r_rem - sum_i min(backlog_i, cap_i)
+            # and it is covered by topping up workers with SPARE deliverable
+            # capacity (cap_i > backlog_i: they would otherwise idle before
+            # the deadline).  Workers with no spare gain nothing from extra
+            # rows — their throughput, not their assignment, binds.
+            posts = est.posteriors()
+            fresh = allocate(policy.scheme, int(r_rem), [posts[i] for i in active])
+            mean_rates = est.rates()
+            cap = np.zeros(n_workers)
+            cap[active] = fresh.tau / np.maximum(mean_rates[active], 1e-300)
+            backlog = np.array(
+                [s.assigned - s.delivered_by(t_e) for s in streams], np.float64
+            )
+            shortfall = r_rem - float(np.minimum(backlog, cap).sum())
+            spare = np.maximum(cap - backlog, 0.0)
+            spare[join > t_e] = 0.0
+            if shortfall < max(1.0, policy.min_topup_frac * r_rem) or not spare.any():
+                if not any(s.has_pending(t_e) for s in streams) and shortfall >= 1:
+                    # idle cluster, threshold unreached: assign regardless
+                    spare = np.zeros(n_workers)
+                    spare[active] = 1.0 / np.maximum(mean_rates[active], 1e-300)
+                else:
+                    continue
+            want = min(shortfall * (1.0 + policy.topup_margin), float(avail))
+            raw = want * spare / spare.sum()
+            topup = np.floor(raw).astype(np.int64)
+            deficit = int(round(want)) - int(topup.sum())
+            if deficit > 0:  # spread remainder to the largest fractional parts
+                order = np.argsort(-(raw - topup))
+                topup[order[:deficit]] += 1
+            total = int(topup.sum())
+            if total > avail:
+                topup = (topup * (avail / total)).astype(np.int64)
+                total = int(topup.sum())
+            if total == 0:
+                continue
+            batches_by_worker = np.ones(n_workers, np.int64)
+            batches_by_worker[active] = fresh.batches
+            for i in np.flatnonzero(topup):
+                nrows = int(topup[i])
+                pw = max(1, min(int(batches_by_worker[i]), nrows))
+                streams[i].add_chunk(
+                    reserve_cursor, nrows, -(-nrows // pw), t_assign=t_e
+                )
+                reserve_cursor += nrows
+            reallocations.append({
+                "t": float(t_e),
+                "topup_rows": total,
+                "workers_topped": int((topup > 0).sum()),
+                "reserve_left": int(capacity - reserve_cursor),
+                "posterior_rates": [round(float(x), 9) for x in est.rates()],
+            })
+
+    ts, wid, lo, n = _merged_events(streams)
+    csum = np.cumsum(n)
+    idx = int(np.searchsorted(csum, required - 1e-9))
+    t_complete = float(ts[idx]) if idx < len(ts) else np.inf
+    return AdaptiveTrace(
+        events=[(float(t), int(w), int(l), int(k)) for t, w, l, k in zip(ts, wid, lo, n)],
+        t_complete=t_complete,
+        rows_assigned=np.array([s.assigned for s in streams], np.int64),
+        topup_rows=int(reserve_cursor - alloc.total_rows),
+        capacity_used=int(reserve_cursor),
+        reallocations=reallocations,
+        required=int(required),
+    )
+
+
+# --------------------------------------------------------------------------
+# Serving-side consumer: parity level from the straggler posterior
+# --------------------------------------------------------------------------
+class ParityController:
+    """Pick the coded LM head's parity level per decode step.
+
+    Feeds on the per-shard latency vector the serving engine already reads
+    (``latency_fn``) and keeps an exponentially-weighted straggler posterior
+    per shard: the fraction of recent steps the shard was a laggard
+    (latency > ``threshold`` × the step's median, or unreachable).
+    ``parity_level`` is the number of shards currently believed straggling,
+    clamped to the code's parity budget — so a healthy step drops nobody
+    (best conditioning, no wasted work) while a persistently slow shard is
+    dropped within a few steps (never waiting on it again until it recovers).
+    """
+
+    def __init__(self, n_blocks: int, decay: float = 0.7, threshold: float = 2.0):
+        if not 0.0 <= decay < 1.0 or threshold <= 1.0 or n_blocks < 1:
+            raise ValueError("bad ParityController config")
+        self.n_blocks = n_blocks
+        self.decay = decay
+        self.threshold = threshold
+        self.posterior = np.zeros(n_blocks)
+
+    def observe(self, latency: np.ndarray) -> None:
+        lat = np.asarray(latency, dtype=np.float64)
+        if lat.shape != (self.n_blocks,):
+            raise ValueError(f"latency must be [{self.n_blocks}], got {lat.shape}")
+        finite = np.isfinite(lat)
+        med = float(np.median(lat[finite])) if finite.any() else 1.0
+        lag = (~finite) | (lat > self.threshold * max(med, 1e-300))
+        self.posterior = self.decay * self.posterior + (1.0 - self.decay) * lag
+
+    def parity_level(self, max_parity: int) -> int:
+        """Shards to drop this step: the posterior-majority straggler count."""
+        return int(min(max_parity, int((self.posterior > 0.5).sum())))

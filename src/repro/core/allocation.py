@@ -93,8 +93,16 @@ def solve_lambda(mu: float, alpha: float, p: int) -> float:
     if flo <= 0.0:
         # numerically already at the infimum (huge p): λ ≈ α
         return alpha
-    if fhi > 0.0:  # pragma: no cover - defensive; cannot happen analytically
-        hi = hi * 2.0
+    # Lemma 1 puts the root inside (α, sup λ]; numerically the upper end can
+    # still evaluate positive for extreme (mu, alpha) — e.g. online-estimated
+    # posteriors with a huge mu*alpha product — so re-bracket by doubling
+    for _ in range(64):
+        if fhi <= 0.0 or not np.isfinite(hi):
+            break
+        hi *= 2.0
+        fhi = f(hi)
+    if fhi > 0.0 or not np.isfinite(hi):  # pragma: no cover - last resort
+        return alpha
     return float(optimize.brentq(f, lo, hi, xtol=1e-15, rtol=1e-14, maxiter=200))
 
 

@@ -41,6 +41,7 @@ from repro.utils.prng import derive, rng as _rng, rng_scratch_iter as _rng_scrat
 
 __all__ = [
     "SimResult",
+    "AdaptiveSimResult",
     "DecodeCostModel",
     "batch_arrival_schedule",
     "sample_rates",
@@ -50,6 +51,7 @@ __all__ = [
     "completion_time_with_decode",
     "completion_times_with_decode_batch",
     "simulate_scheme",
+    "simulate_adaptive_scheme",
     "accumulation_curve",
     "accumulation_curve_scalar",
 ]
@@ -455,6 +457,151 @@ def simulate_scheme(
     return SimResult(
         scheme=scheme, times=times, required=required, tau=alloc.tau,
         times_decode_terminal=term, times_decode_pipelined=pipe,
+    )
+
+
+# --------------------------------------------------------------------------
+# Adaptive BPCC under drift and churn: static vs adaptive vs oracle
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class AdaptiveSimResult:
+    """Monte-Carlo comparison of one scheme under mid-task churn.
+
+    times_static   — completion with the t=0 allocation, never revisited
+                     (np.inf when deaths make recovery unreachable);
+    times_adaptive — completion with epoch-boundary monotone top-ups from
+                     the online rate posterior (DESIGN.md §8); per trial
+                     guaranteed <= times_static (top-ups only add arrivals);
+    times_oracle   — completion when Algorithm 1 is solved at t=0 with the
+                     workers' true post-churn effective models and the dead
+                     workers excluded (the known-rates reference the
+                     adaptive loop tries to recover);
+    topup_rows     — reserve rows the adaptive policy consumed, per trial.
+    """
+
+    scheme: str
+    times_static: np.ndarray
+    times_adaptive: np.ndarray
+    times_oracle: np.ndarray
+    topup_rows: np.ndarray
+    required: int
+    tau: float
+
+
+def _oracle_allocation(scheme, r_alloc, workers, churn, p=None):
+    """Known-rates allocation: Algorithm 1 given every survivor's FINAL rate
+    regime (seconds-per-row scaled by its last churn multiplier), dead
+    workers excluded — what a clairvoyant master would have allocated."""
+    from repro.core.adaptive import padded_allocation
+    from repro.core.distributions import as_shifted_exp
+
+    n = len(workers)
+    _join, death, _times, mults = churn.timeline(n)
+    alive = np.flatnonzero(np.isinf(death))
+    if len(alive) == 0:
+        alive = np.arange(n)  # everyone dies: degenerate, allocate anyway
+    eff = []
+    for i in alive:
+        w = as_shifted_exp(workers[i])
+        m = mults[i][-1]  # final regime multiplier on seconds-per-row
+        eff.append(ShiftedExp(mu=w.mu / m, alpha=w.alpha * m))
+    kw = {"p": p} if scheme == "bpcc" else {}
+    sub = allocate(scheme, r_alloc, eff, **kw)
+    return padded_allocation(sub, alive, n)
+
+
+def simulate_adaptive_scheme(
+    scheme: str,
+    r: int,
+    workers: list[ShiftedExp],
+    *,
+    churn=None,
+    policy=None,
+    p: int | np.ndarray | None = None,
+    n_trials: int = 100,
+    seed: int = 0,
+    straggler_prob: float = 0.0,
+    straggler_slowdown: float = 3.0,
+    code_kind: str = "gaussian",
+    overhead: float = 0.13,
+) -> AdaptiveSimResult:
+    """Monte-Carlo static vs adaptive vs known-rates-oracle completion under
+    drift and churn.
+
+    ``churn`` is a ``cluster.straggler.ChurnPolicy`` (or None); ``policy`` a
+    ``core.adaptive.ReallocationPolicy`` (None -> a default enabled one).
+    Rates use the same ``derive(seed, scheme, trial)`` stream as
+    ``simulate_scheme``; churn draws use an independent
+    ``derive(seed, "churn", trial)`` stream.
+
+    Off-switch equivalence: with ``churn`` falsy AND ``policy.enabled``
+    False, ``times_static``, ``times_adaptive`` and ``times_oracle`` are all
+    the plain ``completion_times_batch`` result — BIT-identical to
+    ``simulate_scheme(...).times`` (asserted in tests/test_adaptive.py).
+    """
+    from repro.core.adaptive import ReallocationPolicy, simulate_adaptive
+
+    if policy is None:
+        policy = ReallocationPolicy()
+    kw = {"p": p} if scheme == "bpcc" else {}
+    alloc = allocate(scheme, r, workers, **kw)
+    required = required_rows(r, code_kind, overhead) if alloc.coded else r
+    seeds = np.array([derive(seed, scheme, trial) for trial in range(n_trials)])
+    rates = sample_rates_batch(workers, seeds, straggler_prob, straggler_slowdown)
+
+    if not churn and not policy.enabled:
+        base = completion_times_batch(alloc, rates, required)
+        return AdaptiveSimResult(
+            scheme=scheme, times_static=base, times_adaptive=base.copy(),
+            times_oracle=base.copy(), topup_rows=np.zeros(n_trials, np.int64),
+            required=required, tau=alloc.tau,
+        )
+
+    horizon = alloc.tau
+    if not np.isfinite(horizon):  # uncoded schemes: expected slowest worker
+        mean_rates = np.array([w.mean_time(1.0) for w in workers])
+        horizon = float(np.max(alloc.loads * mean_rates))
+    reserve = int(np.ceil(policy.reserve_frac * alloc.total_rows))
+    from repro.core.adaptive import control_margin
+
+    margin = control_margin(policy, code_kind, overhead)
+
+    t_static = np.empty(n_trials)
+    t_adapt = np.empty(n_trials)
+    t_oracle = np.empty(n_trials)
+    topup = np.zeros(n_trials, np.int64)
+    from repro.core.adaptive import ChurnSchedule
+
+    for t in range(n_trials):
+        sched = (
+            churn.sample(len(workers), horizon, derive(seed, "churn", t))
+            if churn else ChurnSchedule()
+        )
+        t_static[t] = simulate_adaptive(
+            alloc, workers, rates[t], required=required, churn=sched, policy=None
+        ).t_complete
+        if policy.enabled:
+            tr = simulate_adaptive(
+                alloc, workers, rates[t], required=required,
+                capacity=alloc.total_rows + reserve, churn=sched, policy=policy,
+                required_margin=margin,
+            )
+            t_adapt[t] = tr.t_complete
+            topup[t] = tr.topup_rows
+        else:
+            t_adapt[t] = t_static[t]
+        if sched:
+            o_alloc = _oracle_allocation(scheme, r, workers, sched, p=p)
+            t_oracle[t] = simulate_adaptive(
+                o_alloc, workers, rates[t], required=required, churn=sched,
+                policy=None,
+            ).t_complete
+        else:
+            t_oracle[t] = t_static[t]
+    return AdaptiveSimResult(
+        scheme=scheme, times_static=t_static, times_adaptive=t_adapt,
+        times_oracle=t_oracle, topup_rows=topup, required=required,
+        tau=alloc.tau,
     )
 
 

@@ -262,6 +262,10 @@ def main() -> None:
     ap.add_argument("--set", action="append", default=[], dest="overrides",
                     help="perf knob: key=value (int/bool/str inferred); "
                          "repeatable — e.g. --set onehot_ce=1 --set microbatches=4")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="list the resolved (arch x shape x mesh) cells with "
+                         "applicability and the per-arch train plan, without "
+                         "lowering or compiling anything")
     args = ap.parse_args()
 
     overrides = {}
@@ -280,6 +284,27 @@ def main() -> None:
     archs = [args.arch] if args.arch else list(ARCHS)
     shapes = [args.shape] if args.shape else list(SHAPES)
     pods = {"single": [False], "multi": [True], "both": [False, True]}[args.multi_pod]
+
+    if args.dry_run:
+        # resolved-plan listing, no device work: the config-validation idiom
+        n_cells = 0
+        for arch in archs:
+            cfg = get_config(arch)
+            plan = train_plan(cfg)
+            n, _ = cfg.param_count()
+            print(f"[dryrun] --dry-run {arch}: family={cfg.family} "
+                  f"params~{n:,.0f} train_plan={plan}")
+            for shape in shapes:
+                ok, why = applicable(cfg, shape)
+                for mp in pods:
+                    tag = "2pod" if mp else "1pod"
+                    status = "ok" if ok else f"skip ({why})"
+                    print(f"    x {shape} x {tag}"
+                          f"{' coded' if args.coded else ''}: {status}")
+                    n_cells += ok
+        print(f"[dryrun] --dry-run: {n_cells} compilable cells resolved; "
+              f"nothing compiled")
+        return
 
     done: set = set()
     if args.resume and args.out and os.path.exists(args.out):

@@ -2,6 +2,19 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --smoke \\
         --requests 16 --coded --straggler-prob 0.2
+
+Continuous batching (``serve.engine.ServeEngine``): a fixed decode batch of
+``--slots`` sequences, finished slots immediately refilled from the queue.
+With ``--coded`` the LM-head matvec runs through the block-coded path — up
+to ``--parity`` tensor-parallel shards may straggle or die per step and the
+logits stay exact (DESIGN.md §2/§5).  With ``--adaptive-parity`` the number
+of shards dropped per step is chosen from the recent straggler posterior
+(``core.adaptive.ParityController``, DESIGN.md §8) instead of always
+dropping the ``--parity`` slowest.
+
+``--dry-run`` prints the fully-resolved serving configuration (model
+config, coded-head geometry, engine settings) and exits without building
+the model or executing a single step — the config-validation idiom.
 """
 from __future__ import annotations
 
@@ -10,50 +23,105 @@ import time
 
 import numpy as np
 
-import jax
-
-from repro.configs import get_config
-from repro.models.registry import build_model
-from repro.serve import Request, ServeEngine
-
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="glm4-9b")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--max-new", type=int, default=32)
-    ap.add_argument("--s-max", type=int, default=128)
+    ap = argparse.ArgumentParser(
+        description="Batched LM serving with the BPCC coded head",
+        formatter_class=argparse.ArgumentDefaultsHelpFormatter,
+    )
+    ap.add_argument("--arch", default="glm4-9b",
+                    help="model architecture id (see repro.configs.ARCHS)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced model config sized for the CPU container")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="number of synthetic requests to serve")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="continuous-batching decode slots (batch size)")
+    ap.add_argument("--prompt-len", type=int, default=16,
+                    help="tokens per synthetic prompt")
+    ap.add_argument("--max-new", type=int, default=32,
+                    help="max new tokens generated per request")
+    ap.add_argument("--s-max", type=int, default=128,
+                    help="KV-cache capacity (max sequence length) per slot")
     ap.add_argument("--coded", action="store_true",
                     help="BPCC coded LM head (straggler-tolerant logits)")
-    ap.add_argument("--parity", type=int, default=2)
+    ap.add_argument("--parity", type=int, default=2,
+                    help="parity shards of the coded head (erasure budget)")
     ap.add_argument("--straggler-prob", type=float, default=0.0,
                     help="per-step probability each TP shard's result is lost")
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--adaptive-parity", action="store_true",
+                    help="pick the per-step parity level from the online "
+                         "straggler posterior (DESIGN.md §8) instead of "
+                         "always dropping the full parity budget")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="PRNG seed (params, prompts, straggler draws)")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="print the resolved config and exit without executing")
     args = ap.parse_args()
+    if args.adaptive_parity and not (args.coded and args.straggler_prob > 0):
+        ap.error("--adaptive-parity requires --coded and --straggler-prob > 0 "
+                 "(there is no straggler posterior to adapt to otherwise)")
+
+    from repro.configs import get_config
+    from repro.models.config import coded_blocks
 
     cfg = get_config(args.arch, smoke=args.smoke)
     if args.coded:
         cfg = cfg.scaled(coded=True, coded_parity=args.parity)
+    n_shards = coded_blocks(cfg)  # TP width of the coded LM head (jax-free)
+
+    if args.dry_run:
+        n_params, _ = cfg.param_count()
+        print(f"[serve] --dry-run resolved config:")
+        print(f"  arch={cfg.name} family={cfg.family} smoke={args.smoke} "
+              f"params~{n_params:,.0f}")
+        print(f"  d_model={cfg.d_model} n_layers={cfg.n_layers} "
+              f"vocab={cfg.vocab}")
+        print(f"  engine: slots={args.slots} s_max={args.s_max} "
+              f"requests={args.requests} prompt_len={args.prompt_len} "
+              f"max_new={args.max_new}")
+        print(f"  coded={cfg.coded} parity={cfg.coded_parity if cfg.coded else 0} "
+              f"shards={n_shards} straggler_prob={args.straggler_prob} "
+              f"adaptive_parity={args.adaptive_parity}")
+        return
+
+    import jax
+
+    from repro.core.adaptive import ParityController
+    from repro.models.registry import build_model
+    from repro.serve import Request, ServeEngine
+
     model = build_model(cfg)
     params = model.init(jax.random.key(args.seed))
 
     rng = np.random.default_rng(args.seed)
     mask_fn = None
+    latency_fn = None
+    controller = None
     if args.coded and args.straggler_prob > 0:
-        def mask_fn():
-            m = np.ones(16)
-            drop = rng.random(16) < args.straggler_prob
-            # never drop more than the parity budget (a real deployment
-            # would fall back to waiting for the slowest shard)
-            idx = np.flatnonzero(drop)[: args.parity]
-            m[idx] = 0.0
-            return m
+        if args.adaptive_parity:
+            # shard latencies with randomly-straggling shards: the posterior
+            # decides how many laggards to drop each step
+            def latency_fn():
+                lat = 1e-3 * (1.0 + 0.1 * rng.random(n_shards))
+                slow = rng.random(n_shards) < args.straggler_prob
+                lat[slow] *= 50.0
+                return lat
+
+            controller = ParityController(n_shards)
+        else:
+            def mask_fn():
+                m = np.ones(n_shards)
+                drop = rng.random(n_shards) < args.straggler_prob
+                # never drop more than the parity budget (a real deployment
+                # would fall back to waiting for the slowest shard)
+                idx = np.flatnonzero(drop)[: args.parity]
+                m[idx] = 0.0
+                return m
 
     eng = ServeEngine(model, params, n_slots=args.slots, s_max=args.s_max,
-                      mask_fn=mask_fn)
+                      mask_fn=mask_fn, latency_fn=latency_fn,
+                      parity_controller=controller)
     for i in range(args.requests):
         prompt = rng.integers(0, cfg.vocab, size=args.prompt_len).astype(np.int32)
         eng.submit(Request(uid=i, prompt=prompt, max_new_tokens=args.max_new))
@@ -63,7 +131,8 @@ def main() -> None:
     n_tok = sum(len(r.out_tokens) for r in done)
     print(f"[serve] {len(done)} requests, {n_tok} tokens in {dt:.2f}s "
           f"({n_tok / dt:,.1f} tok/s) coded={args.coded} "
-          f"straggler_prob={args.straggler_prob}")
+          f"straggler_prob={args.straggler_prob} "
+          f"adaptive_parity={controller is not None}")
     for r in done[:3]:
         print(f"  req {r.uid}: {r.out_tokens[:10]}...")
 

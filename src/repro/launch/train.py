@@ -8,6 +8,10 @@ runs reduced/smoke configs on a 1x1 mesh; a TPU pod runs the real configs on
 the production mesh): data pipeline -> pjit'd train step (microbatching,
 remat, optional coded gradient aggregation) -> AdamW (int8 moments
 optional) -> atomic checkpoints with restart, health-monitor hooks.
+
+``--dry-run`` prints the fully-resolved training configuration (model,
+mesh, optimizer, microbatching/gradient-coding plan) and exits before any
+compilation or training step — the config-validation idiom.
 """
 from __future__ import annotations
 
@@ -42,27 +46,59 @@ def make_local_mesh():
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="glm4-9b")
-    ap.add_argument("--smoke", action="store_true", help="reduced config")
-    ap.add_argument("--steps", type=int, default=100)
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--seq", type=int, default=128)
-    ap.add_argument("--lr", type=float, default=3e-3)
-    ap.add_argument("--microbatches", type=int, default=1)
+    ap = argparse.ArgumentParser(
+        description="End-to-end LM training on the production stack",
+        formatter_class=argparse.ArgumentDefaultsHelpFormatter,
+    )
+    ap.add_argument("--arch", default="glm4-9b",
+                    help="model architecture id (see repro.configs.ARCHS)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced model config sized for the CPU container")
+    ap.add_argument("--steps", type=int, default=100,
+                    help="training steps to run")
+    ap.add_argument("--batch", type=int, default=8,
+                    help="global batch size (sequences per step)")
+    ap.add_argument("--seq", type=int, default=128,
+                    help="sequence length in tokens")
+    ap.add_argument("--lr", type=float, default=3e-3,
+                    help="peak learning rate (warmup-cosine schedule)")
+    ap.add_argument("--microbatches", type=int, default=1,
+                    help="gradient-accumulation microbatches per step")
     ap.add_argument("--moment-dtype", default="float32",
-                    choices=["float32", "bfloat16", "int8"])
-    ap.add_argument("--gradient-coding", default=None, choices=[None, "frc", "cyclic"])
-    ap.add_argument("--gc-stragglers", type=int, default=1)
+                    choices=["float32", "bfloat16", "int8"],
+                    help="AdamW moment storage dtype (int8 halves optimizer HBM)")
+    ap.add_argument("--gradient-coding", default=None, choices=[None, "frc", "cyclic"],
+                    help="coded gradient aggregation scheme across microbatches")
+    ap.add_argument("--gc-stragglers", type=int, default=1,
+                    help="straggler budget the gradient code must tolerate")
     ap.add_argument("--straggler-prob", type=float, default=0.0,
                     help="per-step probability a coded grad message is dropped")
-    ap.add_argument("--ckpt-dir", default=None)
-    ap.add_argument("--ckpt-every", type=int, default=50)
-    ap.add_argument("--log-every", type=int, default=10)
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="checkpoint directory (None disables checkpointing)")
+    ap.add_argument("--ckpt-every", type=int, default=50,
+                    help="save an (async, atomic) checkpoint every N steps")
+    ap.add_argument("--log-every", type=int, default=10,
+                    help="print loss/throughput every N steps")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="PRNG seed (init, data pipeline, straggler draws)")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="print the resolved config and exit without executing")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
+    if args.dry_run:
+        n_params, n_act = cfg.param_count()
+        print(f"[train] --dry-run resolved config:")
+        print(f"  arch={cfg.name} family={cfg.family} smoke={args.smoke} "
+              f"params~{n_params:,.0f} (active~{n_act:,.0f})")
+        print(f"  devices={len(jax.devices())} steps={args.steps} "
+              f"batch={args.batch} seq={args.seq} lr={args.lr}")
+        print(f"  microbatches={args.microbatches} moment_dtype={args.moment_dtype} "
+              f"gradient_coding={args.gradient_coding} "
+              f"gc_stragglers={args.gc_stragglers} "
+              f"straggler_prob={args.straggler_prob}")
+        print(f"  ckpt_dir={args.ckpt_dir} ckpt_every={args.ckpt_every}")
+        return
     model = build_model(cfg)
     mesh = make_local_mesh()
     policy = make_policy(mesh, cfg)

@@ -7,7 +7,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
 
-__all__ = ["ModelConfig"]
+__all__ = ["ModelConfig", "coded_blocks"]
 
 
 @dataclass(frozen=True)
@@ -167,3 +167,14 @@ class ModelConfig:
             total += self.n_layers * (2 * attn + mlp_dense)  # self + cross
             active = total
         return int(total), int(active)
+
+
+def coded_blocks(cfg: ModelConfig) -> int:
+    """Total coded blocks for the serving head = TP width (one per shard).
+
+    Lives here (jax-free) so launchers can resolve the coded-head geometry
+    — e.g. for ``--dry-run`` config printing — without importing the model
+    stack.
+    """
+    del cfg
+    return 16

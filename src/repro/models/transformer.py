@@ -496,7 +496,9 @@ def _last_logits(
 
 def _coded_blocks(cfg: ModelConfig) -> int:
     """Total coded blocks for the serving head = TP width (one per shard)."""
-    return 16
+    from repro.models.config import coded_blocks
+
+    return coded_blocks(cfg)
 
 
 # ==========================================================================

@@ -20,7 +20,12 @@ BPCC integration (the paper's technique on the serving hot path):
     step: the ``n_data`` earliest shards survive, the ``n_parity`` laggards
     are dropped (``first_decodable_mask``), and the mask-keyed
     ``DecoderCache`` decodes whichever subset that step produced — a
-    per-step-varying mask costs one table gather, never an SVD.
+    per-step-varying mask costs one table gather, never an SVD;
+  * with a ``core.adaptive.ParityController`` the parity level itself is
+    picked per step from the recent straggler posterior (DESIGN.md §8):
+    a healthy step drops no shards (best conditioning, no wasted work),
+    while shards the posterior flags as persistent stragglers are dropped
+    up to the code's parity budget.
 
 Host-sync discipline (the decode hot loop): greedy argmax runs ON DEVICE
 inside the jitted step, ``last_tok`` stays device-resident and feeds the
@@ -83,11 +88,13 @@ class ServeEngine:
         mask_fn: Callable[[], np.ndarray] | None = None,
         eos_token: int | None = None,
         latency_fn: Callable[[], np.ndarray] | None = None,
+        parity_controller: "ParityController | None" = None,
     ):
         self.model, self.params = model, params
         self.n_slots, self.s_max = n_slots, s_max
         self.mask_fn = mask_fn
         self.latency_fn = latency_fn
+        self.parity_controller = parity_controller
         self.eos_token = eos_token
         self.queue: deque[Request] = deque()
         self.slots: list[Request | None] = [None] * n_slots
@@ -168,6 +175,11 @@ class ServeEngine:
                 lat = np.where(np.asarray(self.mask_fn()) > 0.5, lat, np.inf)
             n_blocks = _coded_blocks(self.model.cfg)
             n_par = self.model.cfg.coded_parity
+            if self.parity_controller is not None:
+                # adaptive parity: drop only the shards the recent straggler
+                # posterior believes are laggards (<= the code's budget)
+                self.parity_controller.observe(lat)
+                n_par = self.parity_controller.parity_level(n_par)
             mask = jnp.asarray(
                 first_decodable_mask(lat, n_blocks - n_par, n_par), jnp.float32
             )

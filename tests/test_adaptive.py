@@ -1,0 +1,403 @@
+"""Adaptive BPCC (DESIGN.md §8): estimator, churn engine, policy, serving.
+
+The load-bearing contracts:
+
+  * the posterior converges to the true rate on synthetic arrivals and
+    respects the surrogate quantile floor (alpha never collapses, so
+    Eq. (18)/(20) stay finite on shift-free service-time models);
+  * the model-time engine with the policy off and no churn is BIT-identical
+    to ``batch_arrival_schedule`` / the existing simulator oracles (minihyp
+    fuzz + the pinned golden-fixture cluster);
+  * monotone top-up: the adaptive trajectory contains every static arrival
+    unchanged, hence t_complete(adaptive) <= t_complete(static) per trial;
+  * the executor's adaptive-off path is bit-identical to the plain path,
+    and churn + adaptation recover correct results end to end.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # containerized CI: the deterministic shim
+    from minihyp import given, settings, strategies as st
+
+from repro.core.adaptive import (
+    ChurnEvent,
+    ChurnSchedule,
+    EstimatorConfig,
+    OnlineRateEstimator,
+    ParityController,
+    ReallocationPolicy,
+    padded_allocation,
+    simulate_adaptive,
+)
+from repro.core.allocation import allocate, bpcc_allocation
+from repro.core.distributions import ShiftedExp, sample_heterogeneous_cluster
+from repro.core.encoding import required_rows
+from repro.core.simulator import (
+    batch_arrival_schedule,
+    sample_rates,
+    simulate_adaptive_scheme,
+    simulate_scheme,
+)
+from repro.cluster.straggler import ChurnPolicy
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures", "golden_allocation.json")
+
+
+# --------------------------------------------------------------------------
+# Online rate estimator
+# --------------------------------------------------------------------------
+def test_estimator_posterior_converges_to_true_rate():
+    """Feeding realized per-batch rates from a known ShiftedExp drives the
+    posterior mean rate (and both parameters) to the truth."""
+    true = ShiftedExp(mu=20.0, alpha=0.05)
+    prior = ShiftedExp(mu=5.0, alpha=0.2)  # deliberately wrong prior
+    est = OnlineRateEstimator([prior], EstimatorConfig(decay=1.0))
+    g = np.random.default_rng(0)
+    for _ in range(2000):
+        est.observe(0, true.alpha + g.exponential() / true.mu, rows=4.0)
+    post = est.posterior(0)
+    assert est.mean_rate(0) == pytest.approx(true.alpha + 1.0 / true.mu, rel=0.05)
+    assert post.alpha == pytest.approx(true.alpha, rel=0.1)
+    assert post.mu == pytest.approx(true.mu, rel=0.3)
+
+
+def test_estimator_no_observations_returns_prior():
+    prior = ShiftedExp(mu=7.0, alpha=0.1)
+    est = OnlineRateEstimator([prior])
+    post = est.posterior(0)
+    assert post.alpha == pytest.approx(prior.alpha)
+    assert est.mean_rate(0) == pytest.approx(prior.alpha + 1.0 / prior.mu)
+
+
+def test_estimator_quantile_floor_respected():
+    """Shift-free observations (a zero-alpha process) must not collapse the
+    posterior shift below the quantile floor — the allocation closed forms
+    scale as 1/alpha and would explode."""
+    cfg = EstimatorConfig(decay=1.0, floor_quantile=0.01)
+    est = OnlineRateEstimator([ShiftedExp(mu=10.0, alpha=1e-3)], cfg)
+    g = np.random.default_rng(1)
+    for _ in range(300):
+        est.observe(0, g.exponential(0.1) + 1e-9)  # essential infimum ~ 0
+    post = est.posterior(0)
+    assert post.alpha >= cfg.floor_quantile * est.mean_rate(0) * (1 - 1e-12)
+    # and Algorithm 1 stays finite on the posterior
+    alloc = bpcc_allocation(1000, [post, post, post])
+    assert np.isfinite(alloc.tau) and alloc.tau > 0
+
+
+def test_estimator_tracks_regime_switch():
+    """Exponential forgetting follows a 3x slowdown within a few epochs."""
+    true = ShiftedExp(mu=20.0, alpha=0.05)
+    est = OnlineRateEstimator([true], EstimatorConfig(decay=0.6))
+    g = np.random.default_rng(2)
+    for _ in range(20):
+        est.decay()
+        for _ in range(10):
+            est.observe(0, true.alpha + g.exponential() / true.mu, rows=8.0)
+    before = est.mean_rate(0)
+    for _ in range(6):
+        est.decay()
+        for _ in range(10):
+            est.observe(0, 3.0 * (true.alpha + g.exponential() / true.mu), rows=8.0)
+    after = est.mean_rate(0)
+    assert after == pytest.approx(3.0 * before, rel=0.25)
+
+
+def test_censoring_detects_death_of_idle_worker():
+    """A worker that dies while IDLE and is later topped up never starts
+    the new chunk; the master must still accumulate censored evidence from
+    the assignment time (a ground-truth-inf start would blind it)."""
+    from repro.core.adaptive import _WorkerStream
+
+    prior = sample_heterogeneous_cluster(1, seed=0)[0]
+    s = _WorkerStream(0, 0.03, join=0.0, death=5.0, times=[0.0], mults=[1.0])
+    s.add_chunk(0, 100, b=10, t_assign=0.0)   # drains by t=3, death at t=5 idle
+    assert np.isfinite(s.t).all()
+    s.add_chunk(100, 50, b=10, t_assign=6.0)  # top-up after the silent death
+    est = OnlineRateEstimator([prior])
+    base = est.mean_rate(0)
+    for t_e in (8.0, 10.0, 14.0):
+        s.feed_estimator(est, t_e)
+        s.censor(est, t_e)
+    assert est.mean_rate(0) > base            # silence raised the posterior
+
+
+def test_estimator_censored_observation_only_raises():
+    est = OnlineRateEstimator([ShiftedExp(mu=10.0, alpha=0.1)])
+    base = est.mean_rate(0)
+    est.observe_censored(0, base * 0.5)      # below the mean: no information
+    assert est.mean_rate(0) == pytest.approx(base)
+    est.observe_censored(0, base * 20.0, rows=50.0)
+    assert est.mean_rate(0) > 2.0 * base
+
+
+# --------------------------------------------------------------------------
+# Engine: off-switch bit-identity (minihyp fuzz + golden fixture)
+# --------------------------------------------------------------------------
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=6),
+    r=st.integers(min_value=200, max_value=2000),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_static_engine_bit_identical_to_schedule(n, r, seed):
+    """Policy off + no churn: events == batch_arrival_schedule exactly."""
+    workers = sample_heterogeneous_cluster(n, seed=seed)
+    alloc = allocate("bpcc", r, workers)
+    rates = sample_rates(workers, seed=seed + 1)
+    trace = simulate_adaptive(alloc, workers, rates, required=r)
+    assert trace.events == batch_arrival_schedule(alloc, rates)
+    assert trace.topup_rows == 0
+    # t_complete is the crossing of ``required`` over that exact merge
+    csum = np.cumsum([e[3] for e in trace.events])
+    idx = int(np.searchsorted(csum, r - 1e-9))
+    assert trace.t_complete == trace.events[idx][0]
+
+
+def test_static_engine_bit_identical_on_golden_cluster():
+    """The pinned Fig. 1-2 fixture cluster: engine == schedule on every
+    golden p-grid cell (ties the adaptive engine to the frozen allocation
+    numerics)."""
+    with open(FIXTURE) as f:
+        golden = json.load(f)
+    workers = [ShiftedExp(**w) for w in golden["workers"]]
+    r = golden["r"]
+    for cell in golden["grid"][:4]:
+        alloc = bpcc_allocation(r, workers, p=cell["p"])
+        assert np.array_equal(alloc.loads, cell["loads"])  # fixture intact
+        rates = sample_rates(workers, seed=cell["p"])
+        trace = simulate_adaptive(alloc, workers, rates, required=r)
+        assert trace.events == batch_arrival_schedule(alloc, rates)
+
+
+def test_simulate_adaptive_scheme_off_bit_identical():
+    """Adaptation disabled + no churn: all three result arrays equal the
+    existing vectorized simulator output bit-for-bit."""
+    workers = sample_heterogeneous_cluster(10, seed=11)
+    res = simulate_adaptive_scheme(
+        "bpcc", 3000, workers, churn=None,
+        policy=ReallocationPolicy(enabled=False), p=8, n_trials=12, seed=0,
+    )
+    base = simulate_scheme("bpcc", 3000, workers, p=8, n_trials=12, seed=0)
+    assert np.array_equal(res.times_static, base.times)
+    assert np.array_equal(res.times_adaptive, base.times)
+    assert np.array_equal(res.times_oracle, base.times)
+    assert (res.topup_rows == 0).all()
+
+
+# --------------------------------------------------------------------------
+# Engine: monotone top-up + churn semantics
+# --------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    mag=st.floats(min_value=1.0, max_value=6.0),
+    rate=st.floats(min_value=0.2, max_value=0.9),
+)
+def test_adaptive_never_worse_than_static(seed, mag, rate):
+    """Per-realization guarantee: top-ups only append arrivals, so the
+    adaptive crossing is never later; the static arrivals appear unchanged
+    inside the adaptive trace (the monotone top-up invariant)."""
+    workers = sample_heterogeneous_cluster(8, seed=17)
+    r = 2000
+    alloc = allocate("bpcc", r, workers, p=8)
+    rates = sample_rates(workers, seed=seed)
+    churn = ChurnPolicy(drift_prob=rate, drift_mag=mag, death_prob=0.15).sample(
+        len(workers), alloc.tau, seed + 1
+    )
+    policy = ReallocationPolicy()
+    cap = alloc.total_rows + int(np.ceil(policy.reserve_frac * alloc.total_rows))
+    t_static = simulate_adaptive(
+        alloc, workers, rates, required=r, churn=churn
+    )
+    t_adapt = simulate_adaptive(
+        alloc, workers, rates, required=r, capacity=cap, churn=churn, policy=policy
+    )
+    assert t_adapt.t_complete <= t_static.t_complete + 1e-12
+    static_set = set(t_static.events)
+    assert static_set.issubset(set(t_adapt.events))
+    # top-ups never exceed the reserve
+    assert t_adapt.capacity_used <= cap
+    assert (t_adapt.rows_assigned >= alloc.loads).all()
+
+
+def test_adaptive_recovers_from_death():
+    """Killing the two biggest-load workers early: static cannot reach the
+    threshold (t = inf); adaptive covers the loss from the reserve."""
+    workers = sample_heterogeneous_cluster(6, seed=3)
+    r = 2000
+    alloc = allocate("bpcc", r, workers, p=4)
+    rates = sample_rates(workers, seed=5)
+    big = np.argsort(-alloc.loads)[:2]
+    churn = ChurnSchedule(tuple(
+        ChurnEvent(t=0.2 * alloc.tau, worker=int(w), kind="death") for w in big
+    ))
+    t_static = simulate_adaptive(alloc, workers, rates, required=r, churn=churn)
+    policy = ReallocationPolicy(reserve_frac=1.0)
+    cap = alloc.total_rows + alloc.total_rows
+    t_adapt = simulate_adaptive(
+        alloc, workers, rates, required=r, capacity=cap, churn=churn, policy=policy
+    )
+    assert not np.isfinite(t_static.t_complete)
+    assert np.isfinite(t_adapt.t_complete)
+    assert t_adapt.topup_rows > 0 and len(t_adapt.reallocations) > 0
+
+
+def test_late_join_worker_gets_topups_only_after_joining():
+    """A worker outside the initial allocation joins mid-task; the policy
+    may assign to it only from its join epoch on (control-plane info)."""
+    workers = sample_heterogeneous_cluster(5, seed=7)
+    r = 1500
+    sub = allocate("bpcc", r, workers[:4], p=4)
+    alloc = padded_allocation(sub, np.arange(4), 5)
+    rates = sample_rates(workers, seed=2)
+    t_join = 0.3 * sub.tau
+    churn = ChurnSchedule((
+        ChurnEvent(t=t_join, worker=4, kind="join"),
+        ChurnEvent(t=0.15 * sub.tau, worker=0, kind="rate", factor=6.0),
+    ))
+    policy = ReallocationPolicy()
+    cap = alloc.total_rows + int(np.ceil(policy.reserve_frac * alloc.total_rows))
+    trace = simulate_adaptive(
+        alloc, workers, rates, required=r, capacity=cap, churn=churn, policy=policy
+    )
+    w4 = [e for e in trace.events if e[1] == 4]
+    if w4:  # if the joiner was topped up, nothing of it precedes the join
+        assert min(e[0] for e in w4) >= t_join
+    assert trace.t_complete <= simulate_adaptive(
+        alloc, workers, rates, required=r, churn=churn
+    ).t_complete + 1e-12
+
+
+def test_profiles_churn_scenario_builders():
+    """The §4.1.2 scenario builders wire churn/late-join end to end."""
+    from repro.cluster.profiles import churn_scenario, late_join_scenario
+
+    r, workers, pol = churn_scenario(1, drift_mag=3.0, churn_rate=0.5, seed=2)
+    assert r == 10_000 and len(workers) == 10 and pol
+    sched = pol.sample(len(workers), horizon=50.0, seed=0)
+    assert all(ev.kind in ("rate", "death") for ev in sched.events)
+
+    r, workers, alloc, churn = late_join_scenario(1, join_frac=0.25, seed=2)
+    assert alloc.loads[-1] == 0          # the joiner starts unallocated
+    assert churn.events[0].kind == "join"
+    rates = sample_rates(workers, seed=1)
+    policy = ReallocationPolicy()
+    cap = alloc.total_rows + int(np.ceil(policy.reserve_frac * alloc.total_rows))
+    tr = simulate_adaptive(
+        alloc, workers, rates, required=r, capacity=cap, churn=churn, policy=policy
+    )
+    assert np.isfinite(tr.t_complete)
+
+
+def test_churn_policy_sampling_is_seed_deterministic():
+    pol = ChurnPolicy(drift_prob=0.5, drift_mag=3.0, death_prob=0.2)
+    a = pol.sample(12, horizon=10.0, seed=42)
+    b = pol.sample(12, horizon=10.0, seed=42)
+    c = pol.sample(12, horizon=10.0, seed=43)
+    assert a.events == b.events
+    assert a.events != c.events
+    for ev in a.events:
+        assert 1.0 <= ev.t <= 6.0  # the default (0.1, 0.6) window x horizon
+
+
+# --------------------------------------------------------------------------
+# Serving: adaptive parity level
+# --------------------------------------------------------------------------
+def test_parity_controller_levels():
+    pc = ParityController(16, decay=0.5)
+    g = np.random.default_rng(0)
+    for _ in range(8):
+        pc.observe(1e-3 + 1e-4 * g.random(16))
+    assert pc.parity_level(4) == 0          # healthy: drop nobody
+    for _ in range(5):
+        lat = 1e-3 + 1e-4 * g.random(16)
+        lat[5] = 5e-2
+        lat[11] = np.inf                     # dead shard
+        pc.observe(lat)
+    assert pc.parity_level(4) == 2          # both persistent laggards
+    assert pc.parity_level(1) == 1          # clamped to the parity budget
+    for _ in range(10):
+        pc.observe(1e-3 + 1e-4 * g.random(16))
+    assert pc.parity_level(4) == 0          # recovery forgets them
+
+
+# --------------------------------------------------------------------------
+# Executor integration (slow: thread emulation)
+# --------------------------------------------------------------------------
+@pytest.mark.slow
+def test_executor_disabled_policy_bit_identical():
+    """run_task with a DISABLED policy routes through the adaptive engine
+    yet reproduces the plain static path bit-for-bit."""
+    from repro.cluster import ClusterEmulator, ec2_scenario
+
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((400, 64)).astype(np.float32)
+    x = rng.standard_normal(64).astype(np.float32)
+    _, workers = ec2_scenario(1)
+    r0 = ClusterEmulator(workers, time_scale=0.3, seed=9).run_task(a, x, "bpcc")
+    r1 = ClusterEmulator(workers, time_scale=0.3, seed=9).run_task(
+        a, x, "bpcc", adaptive=ReallocationPolicy(enabled=False)
+    )
+    assert r1.arrivals == r0.arrivals
+    assert r1.t_complete == r0.t_complete
+    assert r1.rows_received == r0.rows_received
+    assert np.array_equal(r1.y, r0.y)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("code", ["lt", "gaussian"])
+def test_executor_adaptive_recovers_under_churn(code):
+    """Mid-task death + slowdown: the adaptive executor still decodes the
+    exact result, no later than the static run, logging its reallocations."""
+    from repro.cluster import ClusterEmulator, ec2_scenario
+
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((400, 64)).astype(np.float32)
+    x = rng.standard_normal(64).astype(np.float32)
+    _, workers = ec2_scenario(1)
+    ref = a @ x
+    base = ClusterEmulator(workers, time_scale=0.3, seed=9).run_task(a, x, "bpcc")
+    churn = ChurnSchedule((
+        ChurnEvent(t=0.3 * base.t_complete, worker=0, kind="death"),
+        ChurnEvent(t=0.2 * base.t_complete, worker=1, kind="rate", factor=5.0),
+    ))
+    r_static = ClusterEmulator(workers, time_scale=0.2, seed=9).run_task(
+        a, x, "bpcc", code=code, churn=churn
+    )
+    r_adapt = ClusterEmulator(workers, time_scale=0.2, seed=9).run_task(
+        a, x, "bpcc", code=code, churn=churn, adaptive=ReallocationPolicy()
+    )
+    assert r_adapt.ok
+    assert np.abs(r_adapt.y - ref).max() / np.abs(ref).max() < 2e-3
+    assert len(r_adapt.reallocations) > 0
+    assert r_adapt.rows_assigned > r_static.rows_assigned
+    if r_static.ok:
+        assert r_adapt.t_complete <= r_static.t_complete + 1e-9
+
+
+@pytest.mark.slow
+def test_executor_churn_only_is_deterministic():
+    """Same-seed churn runs (no adaptation) are bit-identical — the churn
+    schedule rides the same model-time watermark as everything else."""
+    from repro.cluster import ClusterEmulator, ec2_scenario
+
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((300, 32)).astype(np.float32)
+    x = rng.standard_normal(32).astype(np.float32)
+    _, workers = ec2_scenario(1)
+    churn = ChurnSchedule((ChurnEvent(t=0.005, worker=2, kind="rate", factor=3.0),))
+    runs = [
+        ClusterEmulator(workers, time_scale=0.3, seed=4).run_task(
+            a, x, "bpcc", churn=churn
+        )
+        for _ in range(2)
+    ]
+    assert runs[0].arrivals == runs[1].arrivals
+    assert runs[0].t_complete == runs[1].t_complete
+    assert np.array_equal(runs[0].y, runs[1].y)

@@ -1,0 +1,121 @@
+#!/usr/bin/env python
+"""Markdown link/anchor checker for intra-repo references (CI docs job).
+
+    python tools/check_links.py README.md DESIGN.md docs CHANGES.md
+
+Checks every markdown link ``[text](target)`` in the given files (and
+``*.md`` under given directories), ignoring external schemes
+(http/https/mailto).  A relative target must exist on disk, and a
+``#fragment`` must match a GitHub-slugified heading of the target file
+(or of the same file for bare ``#fragment`` links).  Exits non-zero and
+lists every dead reference.  No third-party dependencies.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+CODE_FENCE_RE = re.compile(r"^(```|~~~)")
+EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor algorithm: lowercase, drop everything but word
+    characters/spaces/hyphens, spaces -> hyphens."""
+    s = heading.strip().lower()
+    s = re.sub(r"[^\w\- ]", "", s, flags=re.UNICODE)
+    return s.replace(" ", "-")
+
+
+def heading_slugs(path: str) -> set[str]:
+    slugs: dict[str, int] = {}
+    out = set()
+    in_fence = False
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            if CODE_FENCE_RE.match(line):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            m = HEADING_RE.match(line)
+            if not m:
+                continue
+            slug = github_slug(m.group(2))
+            n = slugs.get(slug, 0)
+            slugs[slug] = n + 1
+            out.add(slug if n == 0 else f"{slug}-{n}")
+    return out
+
+
+def md_files(targets: list[str]) -> list[str]:
+    files = []
+    for t in targets:
+        if os.path.isdir(t):
+            for root, _dirs, names in os.walk(t):
+                files.extend(
+                    os.path.join(root, n) for n in sorted(names) if n.endswith(".md")
+                )
+        elif os.path.exists(t):
+            files.append(t)
+        else:
+            print(f"warning: {t} does not exist, skipping", file=sys.stderr)
+    return files
+
+
+def check_file(path: str) -> list[str]:
+    errors = []
+    in_fence = False
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            if CODE_FENCE_RE.match(line):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for m in LINK_RE.finditer(line):
+                target = m.group(1)
+                if target.startswith(EXTERNAL) or target.startswith("<"):
+                    continue
+                ref, _, frag = target.partition("#")
+                if ref:
+                    dest = os.path.normpath(os.path.join(os.path.dirname(path), ref))
+                    if not os.path.exists(dest):
+                        errors.append(f"{path}:{lineno}: broken path {target!r}")
+                        continue
+                else:
+                    dest = path
+                if frag:
+                    if not dest.endswith(".md") or os.path.isdir(dest):
+                        continue  # anchors into non-markdown: not checked
+                    if frag.lower() not in heading_slugs(dest):
+                        errors.append(
+                            f"{path}:{lineno}: dead anchor {target!r} "
+                            f"(no heading slug {frag!r} in {dest})"
+                        )
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    targets = argv or ["README.md", "DESIGN.md", "docs", "CHANGES.md"]
+    files = md_files(targets)
+    if not files:
+        print("no markdown files found", file=sys.stderr)
+        return 1
+    all_errors = []
+    for path in files:
+        all_errors.extend(check_file(path))
+    for e in all_errors:
+        print(e)
+    print(
+        f"checked {len(files)} file(s): "
+        + ("OK" if not all_errors else f"{len(all_errors)} dead reference(s)")
+    )
+    return 1 if all_errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

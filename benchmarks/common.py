@@ -7,8 +7,15 @@ import time
 
 import numpy as np
 
-REPORT_DIR = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-                          "reports", "bench")
+# BENCH_REPORT_DIR redirects artifacts to a scratch directory — how
+# tools/bench_compare.py (and CI) run quick-mode benchmarks WITHOUT
+# clobbering the committed full-mode baselines under reports/bench/
+# (the PR-3 incident: a quick rerun overwrote BENCH_decode.json in place).
+REPORT_DIR = os.environ.get(
+    "BENCH_REPORT_DIR",
+    os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                 "reports", "bench"),
+)
 
 
 def emit(name: str, rows: list[dict], keys: list[str] | None = None) -> None:

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from benchmarks.common import emit
 from repro.core.encoding import LTCode
 from repro.kernels import coded_matvec, lt_encode, ssd_forward
+from repro.kernels.ops import gaussian_encode
 
 
 def _time(fn, *args, reps=3):
@@ -44,6 +45,17 @@ def run(quick: bool = False) -> None:
         rows.append({"kernel": "lt_encode", "mode": mode,
                      "shape": f"{plan.q}x{m // 2}",
                      "us_per_call": _time(lambda aa: lt_encode(aa, idx, cf, mode=mode), a2)})
+
+    # reserve-encode kernel (DESIGN.md §9): a dense generator slice of the
+    # size a ReallocationPolicy top-up epoch typically hands out
+    qe, re_, me = (256, 1024, 2048) if not quick else (64, 256, 512)
+    ge = jnp.asarray(rng.standard_normal((qe, re_)).astype(np.float32))
+    ae = jnp.asarray(rng.standard_normal((re_, me)).astype(np.float32))
+    for mode in ["interpret", "off"]:
+        rows.append({"kernel": "gaussian_encode", "mode": mode,
+                     "shape": f"{qe}x{re_}x{me}",
+                     "us_per_call": _time(
+                         lambda gg, aa: gaussian_encode(gg, aa, mode=mode), ge, ae)})
 
     B, S, H, P, G, N = (2, 512, 8, 64, 1, 64) if not quick else (1, 128, 4, 16, 1, 16)
     xs = jnp.asarray(rng.standard_normal((B, S, H, P)).astype(np.float32) * 0.1)

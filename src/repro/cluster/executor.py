@@ -178,6 +178,7 @@ class ClusterEmulator:
         streaming: bool = True,
         adaptive: ReallocationPolicy | None = None,
         churn: ChurnSchedule | None = None,
+        encode_mode: str | None = None,
     ) -> TaskResult:
         """Distributed y = A x under ``scheme`` ('uniform' | 'load_balanced' |
         'hcmm' | 'bpcc').  ``streaming`` overlaps decode with arrivals via
@@ -187,7 +188,16 @@ class ClusterEmulator:
         death, late join); ``adaptive`` enables epoch-boundary reallocation
         from the online rate posterior (monotone top-up from a reserve of
         extra coded rows — DESIGN.md §8).  Both None: the original static
-        path, bit-identical to previous behaviour."""
+        path, bit-identical to previous behaviour.
+
+        ``encode_mode`` routes the RESERVE rows' encode (the top-up pool,
+        rows beyond the static assignment) through the Pallas encode kernels
+        (``repro.kernels.ops.encode_rows``): 'interpret' | 'compile' | 'off'
+        as in kernels.ops, DESIGN.md §9 — mid-task top-ups sit on the
+        control loop's critical path, so unlike the offline pre-stored
+        encode they must not round-trip through the host.  None (default)
+        keeps the whole encode on the host path (bit-identical to previous
+        behaviour)."""
         r, m = a.shape
         if x.shape[0] != m:
             raise ValueError(f"x has {x.shape[0]} entries, A has {m} columns")
@@ -267,7 +277,20 @@ class ClusterEmulator:
                 indices=plan.indices[perm], coeffs=plan.coeffs[perm],
                 r=plan.r, q=plan.q, kind=plan.kind,
             )
-            a_hat = encode_matrix(a, plan)
+            static_rows = int(alloc.total_rows)
+            if encode_mode is not None and capacity > static_rows:
+                # the pre-distributed static assignment is encoded offline
+                # (host, as before); the reserve slice — what top-up epochs
+                # actually hand out — goes through the device encode kernel
+                from repro.kernels.ops import encode_rows
+
+                a_static = encode_matrix(a, plan.slice_rows(0, static_rows))
+                a_reserve = np.asarray(
+                    encode_rows(a, plan, static_rows, capacity, mode=encode_mode)
+                ).astype(a_static.dtype)
+                a_hat = np.concatenate([a_static, a_reserve], axis=0)
+            else:
+                a_hat = encode_matrix(a, plan)
         else:
             plan = None
             a_hat = a

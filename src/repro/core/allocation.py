@@ -41,6 +41,7 @@ __all__ = [
     "beta",
     "tau_star",
     "bpcc_allocation",
+    "infimum_allocation",
     "hcmm_allocation",
     "uniform_allocation",
     "load_balanced_allocation",
@@ -255,6 +256,27 @@ def bpcc_allocation(
             )
         ps = np.where(bad, np.maximum(loads, 1), ps)
     raise RuntimeError("p-repair loop failed to converge")  # pragma: no cover
+
+
+def infimum_allocation(r: int, workers: list[ShiftedExp]) -> Allocation:
+    """BPCC at the p → ∞ operating point, entirely in closed form.
+
+    Theorem 6 / Corollary 6.1 give τ* and ℓ̂_i without root-finding:
+    loads = ⌊ℓ̂_i⌉, batches = the §4.2.2 default ⌊ℓ̂_i⌋ (clipped to [1, r]),
+    tau = Eq. (18).  This is the limit Algorithm 1's own p_i = ⌊ℓ̂_i⌋
+    default approaches; the adaptive simulator's known-rates oracle uses it
+    for p = None cells so the oracle re-allocation per churn realization
+    costs O(N) special functions instead of N brentq solves (DESIGN.md §9).
+    """
+    workers = [as_shifted_exp(w) for w in workers]
+    lhat = load_infimum(r, workers)
+    loads = np.maximum(np.rint(lhat).astype(np.int64), 1)
+    ps = np.clip(np.floor(lhat), 1, max(r, 1)).astype(np.int64)
+    ps = np.minimum(ps, loads)  # the §3.2 constraint l_i >= p_i
+    return Allocation(
+        loads=loads, batches=ps, tau=tau_star_infimum(r, workers),
+        scheme="bpcc", coded=True,
+    )
 
 
 def hcmm_allocation(r: int, workers: list[ShiftedExp]) -> Allocation:

@@ -538,15 +538,39 @@ class DecoderCache:
         self.table = np.stack(mats)                       # [P, n_data, n_blocks]
         self.lut = lut                                    # [2^n_blocks]
         self._pows = (1 << np.arange(n_blocks, dtype=np.int64)).astype(np.int32)
+        # telemetry + eager-path reuse: recovery() counts its calls (the
+        # serving engine's cache-hit-rate assertion reads this), and the
+        # device copies of the tables are memoized OUTSIDE traces so eager
+        # steps don't re-upload ~MBs of recovery matrices per call
+        self.recovery_calls = 0
+        self._dev: tuple | None = None
+        DecoderCache.builds += 1
+
+    builds = 0  # class-wide build counter (one per geometry per process)
+
+    def _tables(self):
+        if self._dev is not None:
+            return self._dev
+        table = jnp.asarray(self.table)
+        lut = jnp.asarray(self.lut)
+        pows = jnp.asarray(self._pows)
+        if not any(
+            isinstance(x, jax.core.Tracer) for x in (table, lut, pows)
+        ):  # only memoize concrete device arrays, never trace-local tracers
+            self._dev = (table, lut, pows)
+        return table, lut, pows
 
     def index(self, mask: jnp.ndarray) -> jnp.ndarray:
         """Table row for a 0/1 (or bool) survivor mask — trace-friendly."""
-        bits = jnp.sum((mask > 0.5).astype(jnp.int32) * self._pows)
-        return jnp.take(self.lut, bits)
+        _table, lut, pows = self._tables()
+        bits = jnp.sum((mask > 0.5).astype(jnp.int32) * pows)
+        return jnp.take(lut, bits)
 
     def recovery(self, mask: jnp.ndarray) -> jnp.ndarray:
         """The cached [n_data, n_blocks] recovery matrix for this mask."""
-        return jnp.take(self.table, self.index(mask), axis=0)
+        self.recovery_calls += 1
+        table, _lut, _pows = self._tables()
+        return jnp.take(table, self.index(mask), axis=0)
 
 
 def first_decodable_mask(
@@ -579,14 +603,27 @@ def first_decodable_mask(
 
 
 _DECODER_CACHES: dict[tuple[int, int], DecoderCache] = {}
+_CACHE_STATS = {"hits": 0, "misses": 0}
 
 
 def get_decoder_cache(n_data: int, n_parity: int) -> DecoderCache:
-    """Process-lifetime memoized DecoderCache (one per code geometry)."""
+    """Process-lifetime memoized DecoderCache (one per code geometry).
+
+    ``decoder_cache_stats()`` exposes hit/miss counts — the serving engine's
+    per-step parity-level changes must all resolve to the SAME prebuilt
+    cache entry (asserted in tests), never a rebuild."""
     key = (n_data, n_parity)
     if key not in _DECODER_CACHES:
+        _CACHE_STATS["misses"] += 1
         _DECODER_CACHES[key] = DecoderCache(n_data, n_parity)
+    else:
+        _CACHE_STATS["hits"] += 1
     return _DECODER_CACHES[key]
+
+
+def decoder_cache_stats() -> dict:
+    """Copy of the process-lifetime get_decoder_cache hit/miss counters."""
+    return dict(_CACHE_STATS)
 
 
 # --------------------------------------------------------------------------

@@ -31,6 +31,7 @@ same summation order where it matters.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import lru_cache
 
 import numpy as np
 
@@ -491,23 +492,39 @@ class AdaptiveSimResult:
 def _oracle_allocation(scheme, r_alloc, workers, churn, p=None):
     """Known-rates allocation: Algorithm 1 given every survivor's FINAL rate
     regime (seconds-per-row scaled by its last churn multiplier), dead
-    workers excluded — what a clairvoyant master would have allocated."""
+    workers excluded — what a clairvoyant master would have allocated.
+
+    The p = None BPCC oracle runs at Algorithm 1's p_i = ⌊ℓ̂_i⌋ default,
+    i.e. the p → ∞ regime — solved with ``infimum_allocation``'s closed
+    forms (one oracle per churn realization; N brentq roots each would
+    dominate the whole batched sweep otherwise)."""
     from repro.core.adaptive import padded_allocation
+    from repro.core.allocation import infimum_allocation
     from repro.core.distributions import as_shifted_exp
 
     n = len(workers)
-    _join, death, _times, mults = churn.timeline(n)
-    alive = np.flatnonzero(np.isinf(death))
+    cc = churn.compiled(n)
+    alive = np.flatnonzero(np.isinf(cc.death))
     if len(alive) == 0:
         alive = np.arange(n)  # everyone dies: degenerate, allocate anyway
     eff = []
     for i in alive:
         w = as_shifted_exp(workers[i])
-        m = mults[i][-1]  # final regime multiplier on seconds-per-row
+        m = cc.mults[i, cc.nseg[i] - 1]  # final regime multiplier
         eff.append(ShiftedExp(mu=w.mu / m, alpha=w.alpha * m))
-    kw = {"p": p} if scheme == "bpcc" else {}
-    sub = allocate(scheme, r_alloc, eff, **kw)
+    if scheme == "bpcc" and p is None:
+        sub = _infimum_cached(r_alloc, tuple(eff))
+    else:
+        kw = {"p": p} if scheme == "bpcc" else {}
+        sub = allocate(scheme, r_alloc, eff, **kw)
     return padded_allocation(sub, alive, n)
+
+
+@lru_cache(maxsize=1024)
+def _infimum_cached(r: int, workers: tuple[ShiftedExp, ...]):
+    from repro.core.allocation import infimum_allocation
+
+    return infimum_allocation(r, list(workers))
 
 
 def simulate_adaptive_scheme(
@@ -524,6 +541,7 @@ def simulate_adaptive_scheme(
     straggler_slowdown: float = 3.0,
     code_kind: str = "gaussian",
     overhead: float = 0.13,
+    engine: str = "batch",
 ) -> AdaptiveSimResult:
     """Monte-Carlo static vs adaptive vs known-rates-oracle completion under
     drift and churn.
@@ -534,6 +552,16 @@ def simulate_adaptive_scheme(
     ``simulate_scheme``; churn draws use an independent
     ``derive(seed, "churn", trial)`` stream.
 
+    ``engine`` picks the trajectory evaluator: ``"batch"`` (default) runs
+    all trials in lockstep through ``simulate_adaptive_batch`` — the fast
+    path; ``"scalar"`` loops ``simulate_adaptive`` per trial — the oracle
+    the batch path reproduces BIT-identically per trial (fuzzed in
+    tests/test_adaptive_batch.py, timed in benchmarks/adaptive_bench.py);
+    ``"scalar-algorithm1"`` additionally re-solves each epoch with the
+    original iterative Algorithm 1 (the pre-batching engine, kept as the
+    benchmark's wall-clock baseline — its trajectories differ slightly
+    from the closed-form re-solve).
+
     Off-switch equivalence: with ``churn`` falsy AND ``policy.enabled``
     False, ``times_static``, ``times_adaptive`` and ``times_oracle`` are all
     the plain ``completion_times_batch`` result — BIT-identical to
@@ -541,6 +569,10 @@ def simulate_adaptive_scheme(
     """
     from repro.core.adaptive import ReallocationPolicy, simulate_adaptive
 
+    if engine not in ("batch", "scalar", "scalar-algorithm1"):
+        raise ValueError(
+            f"engine must be batch|scalar|scalar-algorithm1, got {engine!r}"
+        )
     if policy is None:
         policy = ReallocationPolicy()
     kw = {"p": p} if scheme == "bpcc" else {}
@@ -562,21 +594,60 @@ def simulate_adaptive_scheme(
         mean_rates = np.array([w.mean_time(1.0) for w in workers])
         horizon = float(np.max(alloc.loads * mean_rates))
     reserve = int(np.ceil(policy.reserve_frac * alloc.total_rows))
-    from repro.core.adaptive import control_margin
+    from repro.core.adaptive import ChurnSchedule, control_margin
 
     margin = control_margin(policy, code_kind, overhead)
+    scheds = [
+        churn.sample(len(workers), horizon, derive(seed, "churn", t))
+        if churn else ChurnSchedule()
+        for t in range(n_trials)
+    ]
+    o_allocs = [
+        _oracle_allocation(scheme, r, workers, sched, p=p) if sched else alloc
+        for sched in scheds
+    ]
+
+    if engine == "batch":
+        from repro.core.adaptive import simulate_adaptive_batch
+
+        if policy.enabled:
+            tr = simulate_adaptive_batch(
+                alloc, workers, rates, required=required,
+                capacity=alloc.total_rows + reserve, churn=scheds, policy=policy,
+                required_margin=margin,
+            )
+            t_adapt, topup = tr.t_complete, tr.topup_rows
+            # free by the monotone top-up invariant: the static trajectory
+            # is the adaptive trace with reserve-row events masked out
+            t_static = tr.static_completion(alloc.total_rows, required)
+        else:
+            t_static = simulate_adaptive_batch(
+                alloc, workers, rates, required=required, churn=scheds,
+                policy=None,
+            ).t_complete
+            t_adapt, topup = t_static.copy(), np.zeros(n_trials, np.int64)
+        churned = np.array([bool(s) for s in scheds])
+        if churned.any():
+            t_oracle = simulate_adaptive_batch(
+                o_allocs, workers, rates, required=required, churn=scheds,
+                policy=None,
+            ).t_complete
+            t_oracle = np.where(churned, t_oracle, t_static)
+        else:  # no churn anywhere: the oracle IS the static trajectory
+            t_oracle = t_static.copy()
+        return AdaptiveSimResult(
+            scheme=scheme, times_static=t_static, times_adaptive=t_adapt,
+            times_oracle=t_oracle, topup_rows=np.asarray(topup, np.int64),
+            required=required, tau=alloc.tau,
+        )
 
     t_static = np.empty(n_trials)
     t_adapt = np.empty(n_trials)
     t_oracle = np.empty(n_trials)
     topup = np.zeros(n_trials, np.int64)
-    from repro.core.adaptive import ChurnSchedule
 
     for t in range(n_trials):
-        sched = (
-            churn.sample(len(workers), horizon, derive(seed, "churn", t))
-            if churn else ChurnSchedule()
-        )
+        sched = scheds[t]
         t_static[t] = simulate_adaptive(
             alloc, workers, rates[t], required=required, churn=sched, policy=None
         ).t_complete
@@ -585,15 +656,15 @@ def simulate_adaptive_scheme(
                 alloc, workers, rates[t], required=required,
                 capacity=alloc.total_rows + reserve, churn=sched, policy=policy,
                 required_margin=margin,
+                resolve="algorithm1" if engine == "scalar-algorithm1" else "closed",
             )
             t_adapt[t] = tr.t_complete
             topup[t] = tr.topup_rows
         else:
             t_adapt[t] = t_static[t]
         if sched:
-            o_alloc = _oracle_allocation(scheme, r, workers, sched, p=p)
             t_oracle[t] = simulate_adaptive(
-                o_alloc, workers, rates[t], required=required, churn=sched,
+                o_allocs[t], workers, rates[t], required=required, churn=sched,
                 policy=None,
             ).t_complete
         else:

@@ -15,12 +15,20 @@ import jax.numpy as jnp
 from repro.kernels import ref as _ref
 from repro.kernels.coded_decode import coded_matvec_decode_pallas
 from repro.kernels.coded_matvec import coded_matvec_pallas
-from repro.kernels.lt_encode import lt_encode_pallas
+from repro.kernels.lt_encode import gaussian_encode_pallas, lt_encode_pallas
 from repro.kernels.ssd_scan import ssd_chunk_pallas, ssd_combine_pallas
 
 Mode = Literal["interpret", "compile", "off"]
 
-__all__ = ["coded_matvec", "coded_matvec_decode", "lt_encode", "ssd_forward"]
+__all__ = [
+    "coded_matvec",
+    "coded_matvec_decode",
+    "lt_encode",
+    "gaussian_encode",
+    "encode_rows",
+    "encode_blocks_device",
+    "ssd_forward",
+]
 
 
 def coded_matvec(a, x, mode: Mode = "interpret", **kw):
@@ -44,6 +52,59 @@ def lt_encode(a, indices, coeffs, mode: Mode = "interpret", **kw):
     if mode == "off":
         return _ref.ref_lt_encode(a, indices, coeffs)
     return lt_encode_pallas(a, indices, coeffs, interpret=(mode == "interpret"), **kw)
+
+
+def gaussian_encode(g, a, mode: Mode = "interpret", **kw):
+    """Â = G A for a dense generator slice (tiled MXU matmul, DESIGN.md §9)."""
+    if mode == "off":
+        return _ref.ref_gaussian_encode(g, a)
+    return gaussian_encode_pallas(g, a, interpret=(mode == "interpret"), **kw)
+
+
+def encode_rows(a, plan, start: int, stop: int, mode: Mode = "interpret", **kw):
+    """On-device encode of plan rows [start, stop) — the reserve top-up path.
+
+    Dispatches by code family: dense (gaussian) plans go through the tiled
+    matmul kernel on the generator slice; sparse LT plans through the
+    scalar-prefetch gather kernel on the degree-table slice.  Returns the
+    [stop-start, M] fp32 coded rows.  ``a`` may be any array convertible to
+    a device array; the encode itself never leaves the device.
+    """
+    if not 0 <= start <= stop <= plan.q:
+        raise ValueError(f"bad plan row range [{start}, {stop}) for q={plan.q}")
+    a = jnp.asarray(a)
+    if plan.kind == "gaussian":
+        # a dense plan's coeffs ARE the generator (indices = arange(r))
+        return gaussian_encode(jnp.asarray(plan.coeffs[start:stop]), a, mode, **kw)
+    return lt_encode(
+        a,
+        jnp.asarray(plan.indices[start:stop]),
+        jnp.asarray(plan.coeffs[start:stop]),
+        mode,
+        **kw,
+    )
+
+
+def encode_blocks_device(
+    w, n_data: int, n_parity: int, mode: Mode = "interpret", **kw
+):
+    """Block-MDS weight encode through the tiled kernel (DESIGN.md §9).
+
+    The serving analogue of ``encode_rows``: ``coded_ops.encode_blocks``'s
+    einsum, restructured as  B [n_blocks, n_data] @ blocks [n_data, br*in]
+    so a ParityController-driven parity re-encode runs on device without a
+    host round-trip.  w [out, in] -> [(n_data+n_parity)*br, in] fp32.
+    """
+    from repro.core.coded_ops import block_mds_generator_np
+
+    w = jnp.asarray(w)
+    out, inner = w.shape
+    br = -(-out // n_data)  # ceil
+    wp = jnp.pad(w, ((0, n_data * br - out), (0, 0)))
+    blocks = wp.reshape(n_data, br * inner)
+    b = jnp.asarray(block_mds_generator_np(n_data + n_parity, n_data), jnp.float32)
+    coded = gaussian_encode(b, blocks, mode, **kw)
+    return coded.reshape((n_data + n_parity) * br, inner)
 
 
 def ssd_forward(

@@ -13,6 +13,7 @@ __all__ = [
     "ref_coded_matvec",
     "ref_coded_matvec_decode",
     "ref_lt_encode",
+    "ref_gaussian_encode",
     "ref_ssd_chunk",
     "ref_ssd_combine",
 ]
@@ -46,6 +47,11 @@ def ref_lt_encode(a: jnp.ndarray, indices: jnp.ndarray, coeffs: jnp.ndarray) -> 
     """Â[j] = Σ_d coeffs[j,d] · A[indices[j,d]]   (padded-sparse generator)."""
     gathered = a[indices]  # [q, d_max, m]
     return jnp.einsum("qd,qdm->qm", coeffs.astype(jnp.float32), gathered.astype(jnp.float32))
+
+
+def ref_gaussian_encode(g: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
+    """Â = G A — dense generator slice [q, r] times source [r, M]; fp32."""
+    return jnp.dot(g.astype(jnp.float32), a.astype(jnp.float32))
 
 
 def ref_ssd_chunk(x, da, b, c):

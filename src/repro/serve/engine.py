@@ -89,18 +89,47 @@ class ServeEngine:
         eos_token: int | None = None,
         latency_fn: Callable[[], np.ndarray] | None = None,
         parity_controller: "ParityController | None" = None,
+        parity_topup: int = 0,
+        topup_patience: int = 4,
+        encode_mode: str = "interpret",
     ):
+        """``parity_topup`` allows the engine to RAISE the coded head's
+        parity budget at runtime by up to that many blocks: when the
+        ParityController's straggler posterior saturates the current budget
+        for ``topup_patience`` consecutive steps, the head weight is
+        re-encoded with one more parity block ON DEVICE through the tiled
+        Pallas encode kernel (``kernels.ops.encode_blocks_device``,
+        DESIGN.md §9) — the serving analogue of the executor's reserve
+        top-up.  ``encode_mode`` is the kernel mode for those re-encodes."""
         self.model, self.params = model, params
         self.n_slots, self.s_max = n_slots, s_max
         self.mask_fn = mask_fn
         self.latency_fn = latency_fn
         self.parity_controller = parity_controller
+        self.parity_topup = parity_topup
+        self.topup_patience = topup_patience
+        self.encode_mode = encode_mode
+        self.parity_events: list[dict] = []
+        self._saturated_steps = 0
+        self._steps = 0
         self.eos_token = eos_token
         self.queue: deque[Request] = deque()
         self.slots: list[Request | None] = [None] * n_slots
         self.cache = model.init_cache(n_slots, s_max)
         self._last_tok = jnp.zeros(n_slots, jnp.int32)  # device-resident
         self._active = np.zeros(n_slots, bool)
+        if model.cfg.coded:
+            from repro.models.transformer import _coded_blocks
+
+            self._n_blocks = _coded_blocks(model.cfg)
+        self._bind_model(model)
+        self.completed: list[Request] = []
+
+    def _bind_model(self, model: Model) -> None:
+        """(Re-)jit the decode/prefill steps for the given model config —
+        called at init and after a parity-budget top-up re-encode."""
+        self.model = model
+        s_max = self.s_max
 
         def _decode_argmax(params, cache, last_tok, mask):
             logits, cache = model.decode_step(params, cache, last_tok, mask)
@@ -112,7 +141,6 @@ class ServeEngine:
 
         self._decode = jax.jit(_decode_argmax)
         self._prefill1 = jax.jit(_prefill_argmax)
-        self.completed: list[Request] = []
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -156,29 +184,80 @@ class ServeEngine:
             if not self._active[s] and self.queue:
                 self._insert_slot(s, self.queue.popleft())
 
+    def _raise_parity(self) -> None:
+        """Re-encode the coded head with ONE more parity block, on device.
+
+        The block-MDS head has a fixed block count (one per shard), so a
+        bigger parity budget means a (n_data-1, n_parity+1) re-split — a
+        full re-encode of the head weight, which is exactly the job of the
+        tiled Pallas encode kernel: weights in, coded blocks out, no host
+        round-trip.  The decode/prefill steps re-jit once per raise."""
+        import dataclasses
+
+        from repro.kernels.ops import encode_blocks_device
+        from repro.models.registry import build_model
+
+        cfg = self.model.cfg
+        new_parity = cfg.coded_parity + 1
+        head = (
+            self.params["lm_head"]
+            if "lm_head" in self.params
+            else self.params["embed"].T
+        )
+        pdt = self.params["lm_head_coded"].dtype
+        coded = encode_blocks_device(
+            head.T.astype(jnp.float32),
+            self._n_blocks - new_parity,
+            new_parity,
+            mode=self.encode_mode,
+        )
+        # shallow-copy so the caller's params dict (possibly shared with
+        # other engines) keeps its original-geometry coded head
+        self.params = dict(self.params)
+        self.params["lm_head_coded"] = coded.astype(pdt)
+        self._bind_model(build_model(dataclasses.replace(cfg, coded_parity=new_parity)))
+        self.parity_topup -= 1
+        self._saturated_steps = 0
+        self.parity_events.append({
+            "step": self._steps,
+            "n_parity": new_parity,
+            "encode_mode": self.encode_mode,
+        })
+
     # ------------------------------------------------------------------
     def step(self) -> int:
         """One batched decode step; returns number of active sequences."""
         self._refill()
         if not self._active.any():
             return 0
+        self._steps += 1
         mask = None
         if self.model.cfg.coded and self.latency_fn is not None:
             # first decodable subset: keep the n_data earliest shards this
             # step, drop the laggards — the mask-keyed DecoderCache decodes
             # any such subset without waiting for the slowest n_parity
             from repro.core.decoding import first_decodable_mask
-            from repro.models.transformer import _coded_blocks
 
             lat = np.asarray(self.latency_fn(), np.float64)
             if self.mask_fn is not None:  # dead shards never count as fast
                 lat = np.where(np.asarray(self.mask_fn()) > 0.5, lat, np.inf)
-            n_blocks = _coded_blocks(self.model.cfg)
+            n_blocks = self._n_blocks
             n_par = self.model.cfg.coded_parity
             if self.parity_controller is not None:
                 # adaptive parity: drop only the shards the recent straggler
                 # posterior believes are laggards (<= the code's budget)
                 self.parity_controller.observe(lat)
+                believed = int((self.parity_controller.posterior > 0.5).sum())
+                if believed > n_par and self.parity_topup > 0:
+                    # more persistent stragglers than the budget covers:
+                    # after `topup_patience` consecutive saturated steps,
+                    # encode one more parity block (on device) and re-split
+                    self._saturated_steps += 1
+                    if self._saturated_steps >= self.topup_patience:
+                        self._raise_parity()
+                        n_par = self.model.cfg.coded_parity
+                else:
+                    self._saturated_steps = 0
                 n_par = self.parity_controller.parity_level(n_par)
             mask = jnp.asarray(
                 first_decodable_mask(lat, n_blocks - n_par, n_par), jnp.float32

@@ -382,6 +382,38 @@ def test_executor_adaptive_recovers_under_churn(code):
 
 
 @pytest.mark.slow
+@pytest.mark.parametrize("code", ["lt", "gaussian"])
+def test_executor_reserve_encoded_on_device(code):
+    """Adaptive run with the reserve slice encoded through the kernel path
+    (DESIGN.md §9): the master recovers the exact product, and the arrivals
+    / reallocation trajectory is identical to the host-encode run — only
+    WHERE the reserve rows' floats were produced differs."""
+    from repro.cluster import ClusterEmulator, ec2_scenario
+
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((400, 64)).astype(np.float32)
+    x = rng.standard_normal(64).astype(np.float32)
+    _, workers = ec2_scenario(1)
+    ref = a @ x
+    churn = ChurnSchedule((
+        ChurnEvent(t=0.01, worker=0, kind="death"),
+        ChurnEvent(t=0.008, worker=1, kind="rate", factor=5.0),
+    ))
+    r_host = ClusterEmulator(workers, time_scale=0.2, seed=9).run_task(
+        a, x, "bpcc", code=code, churn=churn, adaptive=ReallocationPolicy()
+    )
+    r_dev = ClusterEmulator(workers, time_scale=0.2, seed=9).run_task(
+        a, x, "bpcc", code=code, churn=churn, adaptive=ReallocationPolicy(),
+        encode_mode="off",
+    )
+    assert r_dev.ok
+    assert np.abs(r_dev.y - ref).max() / np.abs(ref).max() < 2e-3
+    assert r_dev.arrivals == r_host.arrivals          # same model-time algebra
+    assert r_dev.reallocations == r_host.reallocations
+    assert r_dev.rows_assigned == r_host.rows_assigned > 0
+
+
+@pytest.mark.slow
 def test_executor_churn_only_is_deterministic():
     """Same-seed churn runs (no adaptation) are bit-identical — the churn
     schedule rides the same model-time watermark as everything else."""

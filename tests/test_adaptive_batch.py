@@ -1,0 +1,315 @@
+"""Batched adaptive engine vs the scalar oracle: bit-identity (DESIGN.md §9).
+
+The whole value of ``simulate_adaptive_batch`` / ``BatchedRateEstimator``
+rests on one property: a trial inside a [trials, workers] lockstep batch
+evolves through EXACTLY the floats of the scalar per-trial engine.  These
+tests pin that property where it can break:
+
+  * the estimator's sufficient statistics (order-sensitive rows-weighted
+    sums, the censored-silence gate — the death/slowdown evidence flags);
+  * the closed-form re-solve's batch invariance (solving one trial alone
+    == solving it inside any batch — the padding/masking contract);
+  * full-trajectory equality per trial across drift x churn x scheme:
+    events, completion, top-ups, reallocation records;
+  * the static-trajectory-from-adaptive-trace shortcut (monotone top-up
+    invariant);
+  * a golden fixture pinning one batched cell end to end.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # containerized CI: the deterministic shim
+    from minihyp import given, settings, strategies as st
+
+from repro.cluster.straggler import ChurnPolicy
+from repro.core.adaptive import (
+    BatchedRateEstimator,
+    ChurnEvent,
+    ChurnSchedule,
+    EstimatorConfig,
+    OnlineRateEstimator,
+    ReallocationPolicy,
+    padded_allocation,
+    reallocation_targets,
+    simulate_adaptive,
+    simulate_adaptive_batch,
+)
+from repro.core.allocation import allocate
+from repro.core.distributions import ShiftedExp, sample_heterogeneous_cluster
+from repro.core.simulator import (
+    sample_rates,
+    sample_rates_batch,
+    simulate_adaptive_scheme,
+)
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "fixtures", "golden_adaptive.json")
+
+
+# --------------------------------------------------------------------------
+# Estimator: [trials, workers] lockstep == per-trial scalar objects
+# --------------------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    n_workers=st.integers(min_value=1, max_value=6),
+    n_trials=st.integers(min_value=1, max_value=5),
+    decay=st.floats(min_value=0.5, max_value=1.0),
+)
+def test_batched_estimator_bit_identical(seed, n_workers, n_trials, decay):
+    """Random observation streams (plain + censored + decay epochs): the
+    batched estimator's statistics, posterior mean rates, posterior
+    (mu, alpha), and censored-silence firing flags equal the scalar
+    per-trial estimators bit for bit."""
+    rng = np.random.default_rng(seed)
+    priors = sample_heterogeneous_cluster(n_workers, seed=seed)
+    cfg = EstimatorConfig(decay=decay)
+    scalars = [OnlineRateEstimator(priors, cfg) for _ in range(n_trials)]
+    batched = BatchedRateEstimator(priors, n_trials, cfg)
+
+    for _epoch in range(4):
+        # per-slot observation runs of varying length, in one flat feed
+        counts = rng.integers(0, 4, size=(n_trials, n_workers))
+        flat_t, flat_w, flat_spr, flat_rows = [], [], [], []
+        for t in range(n_trials):
+            for w in range(n_workers):
+                for _k in range(counts[t, w]):
+                    spr = float(rng.uniform(0.01, 2.0))
+                    rows = float(rng.integers(1, 50))
+                    scalars[t].observe(w, spr, rows=rows)
+                    flat_t.append(t)
+                    flat_w.append(w)
+                    flat_spr.append(spr)
+                    flat_rows.append(rows)
+        if flat_t:
+            batched.observe_at(
+                np.array(flat_t), np.array(flat_w),
+                np.array(flat_spr), np.array(flat_rows),
+            )
+        # one censored bound per slot, randomly armed — compare the flags
+        armed = rng.random((n_trials, n_workers)) < 0.5
+        elapsed = rng.uniform(0.01, 10.0, size=(n_trials, n_workers))
+        weight = rng.uniform(1.0, 20.0, size=(n_trials, n_workers))
+        expect_fired = np.zeros((n_trials, n_workers), bool)
+        for t in range(n_trials):
+            for w in range(n_workers):
+                if armed[t, w]:
+                    expect_fired[t, w] = elapsed[t, w] > scalars[t].mean_rate(w)
+                    scalars[t].observe_censored(w, elapsed[t, w], rows=weight[t, w])
+        fired = batched.observe_censored_where(armed, elapsed, weight)
+        assert np.array_equal(fired, expect_fired)
+        for t in range(n_trials):
+            scalars[t].decay()
+        batched.decay()
+
+    mu_b, al_b = batched.posterior_params()
+    mean_b = batched.mean_rates()
+    for t in range(n_trials):
+        assert np.array_equal(batched._n[t], scalars[t]._n)
+        assert np.array_equal(batched._s[t], scalars[t]._s)
+        assert np.array_equal(batched._m[t], scalars[t]._m)
+        assert np.array_equal(mean_b[t], scalars[t].rates())
+        mu_s, al_s = scalars[t].posterior_params()
+        assert np.array_equal(mu_b[t], mu_s)
+        assert np.array_equal(al_b[t], al_s)
+
+
+@pytest.mark.parametrize("scheme", ["bpcc", "hcmm"])
+def test_reallocation_targets_batch_invariant(scheme):
+    """A trial's re-solve targets are identical whether solved alone or
+    inside a batch with arbitrary other trials / active masks — the
+    property the engine bit-identity contract is built on."""
+    rng = np.random.default_rng(0)
+    t, n = 7, 9
+    mu = rng.uniform(0.5, 60.0, size=(t, n))
+    alpha = rng.uniform(1e-3, 1.0, size=(t, n))
+    active = rng.random((t, n)) < 0.7
+    active[:, 0] = True  # at least one active worker per trial
+    r_rem = rng.integers(50, 5000, size=t).astype(np.float64)
+    tau_b, p_b = reallocation_targets(scheme, r_rem, mu, alpha, active)
+    for i in range(t):
+        tau_1, p_1 = reallocation_targets(
+            scheme, r_rem[i: i + 1], mu[i: i + 1], alpha[i: i + 1],
+            active[i: i + 1],
+        )
+        assert tau_b[i] == tau_1[0]
+        assert np.array_equal(p_b[i], p_1[0])
+    assert np.isfinite(tau_b).all() and (tau_b > 0).all()
+    if scheme == "hcmm":
+        assert (p_b == 1).all()
+
+
+# --------------------------------------------------------------------------
+# Full-trajectory bit-identity across drift x churn x scheme
+# --------------------------------------------------------------------------
+@settings(max_examples=6, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    mag=st.floats(min_value=0.0, max_value=5.0),
+    rate=st.floats(min_value=0.0, max_value=0.9),
+    scheme=st.sampled_from(["bpcc", "hcmm"]),
+)
+def test_simulate_adaptive_batch_bit_identical(seed, mag, rate, scheme):
+    """Per-trial equality of the full trace: events, t_complete, top-ups,
+    per-worker assignments, and the reallocation records (incl. the
+    re-solve's posterior-rate inputs)."""
+    workers = sample_heterogeneous_cluster(6, seed=17)
+    r = 900
+    kw = {"p": 6} if scheme == "bpcc" else {}
+    alloc = allocate(scheme, r, workers, **kw)
+    n_trials = 5
+    rates = np.stack([sample_rates(workers, seed=seed + t) for t in range(n_trials)])
+    policy = ReallocationPolicy()
+    cap = alloc.total_rows + int(np.ceil(policy.reserve_frac * alloc.total_rows))
+    churn = (
+        ChurnPolicy(drift_prob=rate, drift_mag=mag, death_prob=0.15 * rate)
+        if mag > 0 and rate > 0 else None
+    )
+    scheds = [
+        churn.sample(len(workers), alloc.tau, seed + 100 + t)
+        if churn else ChurnSchedule()
+        for t in range(n_trials)
+    ]
+    bt = simulate_adaptive_batch(
+        alloc, workers, rates, required=r, capacity=cap, churn=scheds,
+        policy=policy,
+    )
+    for t in range(n_trials):
+        sc = simulate_adaptive(
+            alloc, workers, rates[t], required=r, capacity=cap,
+            churn=scheds[t], policy=policy,
+        )
+        assert bt.events_for_trial(t) == sc.events
+        assert bt.t_complete[t] == sc.t_complete or (
+            np.isinf(bt.t_complete[t]) and np.isinf(sc.t_complete)
+        )
+        assert bt.topup_rows[t] == sc.topup_rows
+        assert bt.capacity_used[t] == sc.capacity_used
+        assert np.array_equal(bt.rows_assigned[t], sc.rows_assigned)
+        assert bt.reallocations[t] == sc.reallocations
+
+
+def test_static_completion_from_adaptive_trace():
+    """The monotone top-up invariant makes the static trajectory free: the
+    adaptive trace with reserve rows masked == a separate static run."""
+    workers = sample_heterogeneous_cluster(6, seed=3)
+    r = 1200
+    alloc = allocate("bpcc", r, workers, p=6)
+    policy = ReallocationPolicy()
+    cap = alloc.total_rows + int(np.ceil(policy.reserve_frac * alloc.total_rows))
+    n_trials = 6
+    rates = np.stack([sample_rates(workers, seed=40 + t) for t in range(n_trials)])
+    churn = ChurnPolicy(drift_prob=0.6, drift_mag=4.0, death_prob=0.2)
+    scheds = [churn.sample(len(workers), alloc.tau, 77 + t) for t in range(n_trials)]
+    tr = simulate_adaptive_batch(
+        alloc, workers, rates, required=r, capacity=cap, churn=scheds,
+        policy=policy,
+    )
+    derived = tr.static_completion(alloc.total_rows, r)
+    static = simulate_adaptive_batch(
+        alloc, workers, rates, required=r, churn=scheds, policy=None
+    ).t_complete
+    assert np.array_equal(derived, static)
+    assert (tr.t_complete <= derived + 1e-12).all()
+
+
+def test_batch_engine_per_trial_allocations():
+    """The oracle path's per-trial allocations: a list of (padded)
+    allocations runs through the static batch engine trial-for-trial
+    identically to scalar runs."""
+    workers = sample_heterogeneous_cluster(5, seed=7)
+    r = 800
+    n_trials = 4
+    rates = np.stack([sample_rates(workers, seed=60 + t) for t in range(n_trials)])
+    allocs = []
+    for t in range(n_trials):
+        sub = allocate("bpcc", r, workers[: 3 + (t % 2)], p=4)
+        allocs.append(padded_allocation(sub, np.arange(3 + (t % 2)), 5))
+    bt = simulate_adaptive_batch(allocs, workers, rates, required=r)
+    for t in range(n_trials):
+        sc = simulate_adaptive(allocs[t], workers, rates[t], required=r)
+        assert bt.events_for_trial(t) == sc.events
+        assert bt.t_complete[t] == sc.t_complete or (
+            np.isinf(bt.t_complete[t]) and np.isinf(sc.t_complete)
+        )
+    with pytest.raises(ValueError):
+        simulate_adaptive_batch(
+            allocs, workers, rates, required=r, policy=ReallocationPolicy()
+        )
+
+
+def test_scheme_engines_agree_under_deaths():
+    """simulate_adaptive_scheme(engine='batch') == engine='scalar' on a
+    deaths-enabled cell — static, adaptive, oracle, and top-ups."""
+    workers = sample_heterogeneous_cluster(8, seed=11)
+    churn = ChurnPolicy(drift_prob=0.6, drift_mag=4.0, death_prob=0.15)
+    out = {}
+    for eng in ("batch", "scalar"):
+        out[eng] = simulate_adaptive_scheme(
+            "bpcc", 1500, workers, churn=churn, policy=ReallocationPolicy(),
+            p=8, n_trials=8, seed=0, engine=eng,
+        )
+    for f in ("times_static", "times_adaptive", "times_oracle", "topup_rows"):
+        assert np.array_equal(getattr(out["batch"], f), getattr(out["scalar"], f)), f
+
+
+# --------------------------------------------------------------------------
+# Compiled churn arrays
+# --------------------------------------------------------------------------
+def test_compiled_churn_matches_timeline_and_caches():
+    sched = ChurnSchedule((
+        ChurnEvent(t=2.0, worker=1, kind="rate", factor=3.0),
+        ChurnEvent(t=1.0, worker=1, kind="rate", factor=0.5),
+        ChurnEvent(t=4.0, worker=0, kind="death"),
+        ChurnEvent(t=1.5, worker=2, kind="join"),
+    ))
+    cc = sched.compiled(3)
+    assert cc is sched.compiled(3)  # one-time compile per realization
+    join, death, times, mults = sched.timeline(3)
+    assert join[2] == 1.5 and death[0] == 4.0
+    assert times[1] == [0.0, 1.0, 2.0] and mults[1] == [1.0, 0.5, 3.0]
+    assert cc.nseg.tolist() == [1, 3, 1]
+    assert np.isinf(cc.times[0, 1:]).all()  # padding breakpoints
+    with pytest.raises(ValueError):
+        sched.compiled(2)  # worker 2 out of range
+
+
+# --------------------------------------------------------------------------
+# Golden fixture: one batched cell pinned end to end
+# --------------------------------------------------------------------------
+def test_golden_adaptive_cell():
+    """A deaths-enabled BPCC cell pinned from the batched engine: guards
+    the whole stack (closed-form re-solve, estimator, churn compile, merge)
+    against silent numeric drift.  Tolerance 1e-9 covers scipy special-
+    function ulps across platforms; within one platform the values are
+    exact."""
+    with open(GOLDEN) as f:
+        g = json.load(f)
+    workers = [ShiftedExp(**w) for w in g["workers"]]
+    churn = ChurnPolicy(**g["churn_policy"])
+    res = simulate_adaptive_scheme(
+        "bpcc", g["r"], workers, churn=churn,
+        policy=ReallocationPolicy(), p=g["p"], n_trials=g["n_trials"],
+        seed=g["seed"], engine="batch",
+    )
+    assert res.topup_rows.tolist() == g["topup_rows"]
+    for name in ("times_static", "times_adaptive", "times_oracle"):
+        got = getattr(res, name)
+        want = np.array([np.inf if v is None else v for v in g[name]])
+        # inf (unrecoverable static assignments) must match exactly
+        assert np.array_equal(np.isfinite(got), np.isfinite(want)), name
+        fin = np.isfinite(want)
+        np.testing.assert_allclose(got[fin], want[fin], rtol=1e-9, err_msg=name)
+
+
+def test_sample_rates_batch_matches_scalar():
+    """The trial seeds feeding both engines draw identical rate matrices."""
+    workers = sample_heterogeneous_cluster(7, seed=5)
+    seeds = np.arange(9) * 13 + 1
+    batch = sample_rates_batch(workers, seeds)
+    for t, s in enumerate(seeds):
+        assert np.array_equal(batch[t], sample_rates(workers, int(s)))

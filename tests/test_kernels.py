@@ -10,9 +10,10 @@ except ImportError:  # image without hypothesis: deterministic shim (minihyp)
 
 from repro.core.coded_ops import CodedLinear
 from repro.core.decoding import get_decoder_cache
-from repro.core.encoding import LTCode, GaussianCode
+from repro.core.encoding import LTCode, GaussianCode, encode_matrix
 from repro.kernels import coded_matvec, coded_matvec_decode, lt_encode, ssd_forward
 from repro.kernels import ref as R
+from repro.kernels.ops import encode_blocks_device, encode_rows, gaussian_encode
 from repro.models.ssm import ssd_chunked
 
 
@@ -135,6 +136,72 @@ def test_ssd_forward_with_initial_state():
     y_o, f_o = ssd_chunked(x, da, b_, c_, chunk=8, h0=h0)
     np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_o), rtol=1e-4, atol=1e-5)
     np.testing.assert_allclose(np.asarray(f_k), np.asarray(f_o), rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("q,r,m", [
+    (37, 64, 129),    # nothing aligned
+    (128, 200, 512),  # aligned output panel
+    (5, 7, 3),        # degenerate tiny
+    (1, 513, 640),    # single coded row, padded contraction
+])
+def test_gaussian_encode_kernel_vs_oracle(q, r, m):
+    """Tiled dense encode kernel == the jnp oracle == plain G @ A."""
+    rng = np.random.default_rng(q * 17 + m)
+    g = rng.standard_normal((q, r)).astype(np.float32)
+    a = rng.standard_normal((r, m)).astype(np.float32)
+    got = np.asarray(gaussian_encode(jnp.asarray(g), jnp.asarray(a), mode="interpret"))
+    want = np.asarray(R.ref_gaussian_encode(jnp.asarray(g), jnp.asarray(a)))
+    np.testing.assert_allclose(got, want, rtol=2e-3,
+                               atol=2e-3 * max(1, np.abs(want).max()))
+    np.testing.assert_allclose(got, g @ a, rtol=1e-3,
+                               atol=1e-3 * max(1, np.abs(g @ a).max()))
+
+
+@settings(max_examples=8, deadline=None)
+@given(q=st.integers(1, 150), r=st.integers(1, 180), m=st.integers(1, 300),
+       bq=st.sampled_from([32, 128]), bk=st.sampled_from([64, 512]))
+def test_gaussian_encode_property(q, r, m, bq, bk):
+    rng = np.random.default_rng(q * 13 + r)
+    g = rng.standard_normal((q, r)).astype(np.float32)
+    a = rng.standard_normal((r, m)).astype(np.float32)
+    got = np.asarray(gaussian_encode(jnp.asarray(g), jnp.asarray(a),
+                                     mode="interpret", block_q=bq, block_r=bk))
+    want = g @ a
+    np.testing.assert_allclose(got, want, rtol=2e-3,
+                               atol=2e-3 * max(1, np.abs(want).max()))
+
+
+@pytest.mark.parametrize("code", ["lt", "gaussian"])
+def test_encode_rows_matches_host_encode(code):
+    """The reserve-slice device encode == the host encode_matrix slice —
+    the executor's top-up rows decode against the same generator rows."""
+    r, m, cap = 64, 48, 100
+    rng = np.random.default_rng(3)
+    a = rng.standard_normal((r, m)).astype(np.float32)
+    plan = (LTCode(r, seed=1) if code == "lt" else GaussianCode(r, seed=1)).plan(cap)
+    full = encode_matrix(a, plan)
+    for mode in ("interpret", "off"):
+        sl = np.asarray(encode_rows(a, plan, 70, cap, mode=mode))
+        np.testing.assert_allclose(
+            sl, full[70:cap], rtol=1e-3, atol=1e-3 * max(1, np.abs(full).max())
+        )
+    with pytest.raises(ValueError):
+        encode_rows(a, plan, 80, cap + 1)
+
+
+def test_encode_blocks_device_matches_einsum():
+    """Block-MDS head re-encode through the kernel == coded_ops einsum."""
+    from repro.core.coded_ops import encode_blocks
+
+    rng = np.random.default_rng(4)
+    w = rng.standard_normal((50, 16)).astype(np.float32)
+    for n_data, n_parity in [(12, 4), (13, 3), (14, 2)]:
+        want = np.asarray(encode_blocks(jnp.asarray(w), n_data, n_parity))
+        for mode in ("interpret", "off"):
+            got = np.asarray(encode_blocks_device(w, n_data, n_parity, mode=mode))
+            np.testing.assert_allclose(
+                got, want, rtol=1e-4, atol=1e-4 * max(1, np.abs(want).max())
+            )
 
 
 def test_kernel_off_mode_is_reference():

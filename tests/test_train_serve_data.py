@@ -171,6 +171,86 @@ def test_coded_engine_first_decodable_subset():
     assert completed[0].out_tokens == eng_ref.run()[0].out_tokens
 
 
+def test_decoder_cache_reused_across_parity_levels():
+    """One DecoderCache serves EVERY ParityController parity level: the
+    level only changes the mask (how many laggards are dropped), never the
+    code geometry, so varying it step to step must hit the same prebuilt
+    table — no rebuild per step (DESIGN.md §9 / ISSUE 4 satellite)."""
+    from repro.core import decoding as D
+    from repro.core.adaptive import ParityController
+    from repro.core.coded_ops import decode_blocks
+
+    D._DECODER_CACHES.clear()
+    D._CACHE_STATS.update(hits=0, misses=0)
+    builds0 = D.DecoderCache.builds
+    n_data, n_parity = 6, 2
+    n_blocks = n_data + n_parity
+    pc = ParityController(n_blocks, decay=0.5)
+    rng = np.random.default_rng(0)
+    y = jnp.asarray(rng.standard_normal((n_blocks, 4, 3)).astype(np.float32))
+    n_steps = 12
+    for i in range(n_steps):
+        lat = 1e-3 + 1e-4 * rng.random(n_blocks)
+        if i >= 4:
+            lat[1] = 5e-2          # one persistent laggard appears
+        if i >= 8:
+            lat[5] = np.inf        # then a dead shard: level climbs 0->1->2
+        pc.observe(lat)
+        level = pc.parity_level(n_parity)
+        mask = D.first_decodable_mask(lat, n_blocks - level, level)
+        decode_blocks(y, jnp.asarray(mask), n_data, n_parity)
+    assert D.DecoderCache.builds - builds0 == 1  # one geometry, one build
+    stats = D.decoder_cache_stats()
+    assert stats["misses"] == 1 and stats["hits"] == n_steps - 1
+    cache = D.get_decoder_cache(n_data, n_parity)
+    assert cache.recovery_calls == n_steps
+    # hit-rate over the step loop: every step after the first was a reuse
+    assert stats["hits"] / (stats["hits"] + stats["misses"]) >= (n_steps - 1) / n_steps
+
+
+def test_serve_parity_topup_reencodes_on_device():
+    """Saturating the ParityController's posterior above the parity budget
+    triggers an on-device head re-encode with one more parity block
+    (DESIGN.md §9) — and the tokens stay exactly those of the unmasked
+    reference engine even with 3 persistent stragglers on a budget of 2."""
+    from repro.core.adaptive import ParityController
+
+    cfg = CFG.scaled(coded=True, coded_parity=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+
+    def latency_fn():  # three persistent stragglers > the parity budget
+        lat = np.full(16, 1e-3)
+        lat[2] = lat[7] = lat[11] = 5e-2
+        return lat
+
+    eng = ServeEngine(
+        model, params, n_slots=2, s_max=32,
+        latency_fn=latency_fn,
+        parity_controller=ParityController(16, decay=0.5),
+        parity_topup=1, topup_patience=2, encode_mode="off",
+    )
+    for i in range(3):
+        eng.submit(Request(uid=i, prompt=np.arange(4 + i) % 64, max_new_tokens=6))
+    outs = {r.uid: r.out_tokens for r in eng.run()}
+
+    assert len(eng.parity_events) == 1
+    assert eng.parity_events[0]["n_parity"] == 3
+    assert eng.model.cfg.coded_parity == 3
+    assert eng.parity_topup == 0           # budget spent
+    # the original params dict still holds the (14, 2) head untouched
+    assert not np.array_equal(
+        np.asarray(params["lm_head_coded"]),
+        np.asarray(eng.params["lm_head_coded"]),
+    )
+
+    ref = ServeEngine(build_model(cfg), params, n_slots=2, s_max=32)
+    for i in range(3):
+        ref.submit(Request(uid=i, prompt=np.arange(4 + i) % 64, max_new_tokens=6))
+    ref_outs = {r.uid: r.out_tokens for r in ref.run()}
+    assert outs == ref_outs
+
+
 # ---------------------------------------------------------------- data
 def test_pipeline_deterministic_and_restartable():
     pipe = make_pipeline(CFG, seq=16, global_batch=4, seed=9)

@@ -1,0 +1,189 @@
+"""Guard the committed benchmark baselines against drift and clobbering.
+
+    PYTHONPATH=src python tools/bench_compare.py [--skip-run] [--scratch DIR]
+
+Runs the perf benchmark blocks in ``--quick`` mode into a SCRATCH directory
+(``BENCH_REPORT_DIR`` — never the committed ``reports/bench/``; the PR-3
+incident was a quick rerun overwriting the full-mode ``BENCH_decode.json``
+in place), then diffs the fresh artifacts against the committed baselines:
+
+  * schema: every baseline column must still be produced (a silently
+    renamed/dropped field breaks downstream figure tooling);
+  * invariants: the scale-free claims each baseline encodes must hold in
+    the fresh run too, with tolerance thresholds — quick mode shrinks
+    trial counts and shapes, so ABSOLUTE numbers are never compared:
+      - decode:     the cached decode stays faster than the SVD seed path;
+      - streaming:  residual decode beats terminal, decodes stay exact;
+      - adaptive:   adaptive <= static per cell, engines bit-identical,
+                    batch-vs-algorithm1 speedup above the quick floor;
+      - kernels:    every (kernel, shape) has both interpret + off rows;
+  * upload: the fresh encode-kernel rows (``gaussian_encode``) are merged
+    into the committed ``reports/bench/kernels.json`` so the new kernel's
+    numbers ride along without hand-editing (other rows untouched).
+
+Exit code 0 = baselines healthy; 1 = a check failed (printed).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE_DIR = os.path.join(REPO, "reports", "bench")
+BLOCKS = "kernels,decode,streaming,adaptive"
+FILES = ["kernels", "BENCH_decode", "BENCH_streaming", "BENCH_adaptive"]
+ADAPTIVE_QUICK_SPEEDUP = 2.5   # matches benchmarks/adaptive_bench.py
+DECODE_MIN_ADVANTAGE = 1.0     # cached decode at least matches the SVD path
+STREAMING_MIN_ADVANTAGE = 1.0  # residual decode at least matches terminal
+
+_failures: list[str] = []
+
+
+def fail(msg: str) -> None:
+    _failures.append(msg)
+    print(f"FAIL: {msg}")
+
+
+def load(d: str, name: str):
+    path = os.path.join(d, f"{name}.json")
+    if not os.path.exists(path):
+        fail(f"{name}: missing artifact {path}")
+        return None
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except json.JSONDecodeError as e:
+        fail(f"{name}: unparseable JSON ({e})")
+        return None
+
+
+def check_schema(name: str, baseline: list[dict], fresh: list[dict]) -> None:
+    if not baseline or not fresh:
+        fail(f"{name}: empty row list (baseline={len(baseline or [])}, "
+             f"fresh={len(fresh or [])})")
+        return
+    base_keys = set().union(*(r.keys() for r in baseline))
+    fresh_keys = set().union(*(r.keys() for r in fresh))
+    missing = base_keys - fresh_keys
+    if missing:
+        fail(f"{name}: fresh run dropped baseline columns {sorted(missing)}")
+
+
+def check_decode(fresh: list[dict]) -> None:
+    for r in fresh:
+        adv = r.get("svd_over_cached")
+        if adv is not None and adv < DECODE_MIN_ADVANTAGE:
+            fail(f"decode: cached path lost its advantage in {r.get('bench')} "
+                 f"{r.get('shape')} (svd_over_cached={adv:.2f})")
+
+
+def check_streaming(fresh: list[dict]) -> None:
+    for r in fresh:
+        if r.get("ok") is False:
+            fail(f"streaming: decode failed in {r.get('bench')} r={r.get('r')}")
+        adv = r.get("residual_speedup")
+        if adv is not None and adv < STREAMING_MIN_ADVANTAGE:
+            fail(f"streaming: residual decode slower than terminal "
+                 f"({r.get('bench')} {r.get('code')} r={r.get('r')}: {adv:.2f}x)")
+
+
+def check_adaptive(fresh: list[dict]) -> None:
+    for r in fresh:
+        if r.get("scheme") == "ENGINE_TOTALS":
+            if r.get("engine_speedup", 0.0) < ADAPTIVE_QUICK_SPEEDUP:
+                fail(f"adaptive: quick-grid engine speedup "
+                     f"{r['engine_speedup']:.2f}x < {ADAPTIVE_QUICK_SPEEDUP}x")
+            continue
+        if not r.get("bit_identical", False):
+            fail(f"adaptive: batch engine not bit-identical in "
+                 f"({r.get('scheme')}, p={r.get('p')}, mag={r.get('drift_mag')}, "
+                 f"churn={r.get('churn_rate')})")
+        if r.get("mean_adaptive", 0.0) > r.get("mean_static", 0.0) * (1 + 1e-9):
+            fail(f"adaptive: adaptive mean worse than static in "
+                 f"({r.get('scheme')}, p={r.get('p')}, mag={r.get('drift_mag')}, "
+                 f"churn={r.get('churn_rate')})")
+
+
+def check_kernels(fresh: list[dict]) -> None:
+    seen: dict[tuple, set] = {}
+    for r in fresh:
+        seen.setdefault((r["kernel"],), set()).add(r["mode"])
+    for (kernel,), modes in seen.items():
+        if not {"interpret", "off"} <= modes:
+            fail(f"kernels: {kernel} missing a mode (have {sorted(modes)})")
+    if ("gaussian_encode",) not in seen:
+        fail("kernels: encode kernel (gaussian_encode) rows missing")
+
+
+def upload_encode_rows(fresh: list[dict]) -> None:
+    """Merge the fresh encode-kernel rows into the committed kernels.json —
+    keyed by (kernel, mode, shape), so a rerun refreshes ITS OWN shapes in
+    place and never replaces rows measured at other (e.g. full-mode)
+    shapes — this tool always runs --quick, and overwriting full-mode rows
+    would be the exact clobbering incident it exists to prevent."""
+    path = os.path.join(BASELINE_DIR, "kernels.json")
+    with open(path) as f:
+        committed = json.load(f)
+    new = [r for r in fresh if r["kernel"] == "gaussian_encode"]
+    if not new:
+        return
+    key = lambda r: (r["kernel"], r["mode"], r["shape"])  # noqa: E731
+    new_keys = {key(r) for r in new}
+    keep = [r for r in committed if key(r) not in new_keys]
+    with open(path, "w") as f:
+        json.dump(keep + new, f, indent=1, default=float)
+    print(f"uploaded {len(new)} gaussian_encode rows into reports/bench/kernels.json")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--scratch", default=os.path.join(REPO, "reports", "bench-ci"),
+                    help="scratch dir the quick run writes to (never reports/bench)")
+    ap.add_argument("--skip-run", action="store_true",
+                    help="diff existing scratch artifacts without rerunning")
+    args = ap.parse_args()
+    scratch = os.path.abspath(args.scratch)
+    if os.path.realpath(scratch) == os.path.realpath(BASELINE_DIR):
+        print("refusing to use the committed baseline dir as scratch")
+        return 1
+    if not args.skip_run:
+        env = dict(os.environ, BENCH_REPORT_DIR=scratch)
+        env["PYTHONPATH"] = os.pathsep.join(
+            p for p in [os.path.join(REPO, "src"), env.get("PYTHONPATH")] if p
+        )
+        cmd = [sys.executable, "-m", "benchmarks.run", "--quick", "--only", BLOCKS]
+        print("+", " ".join(cmd), f"(BENCH_REPORT_DIR={scratch})")
+        proc = subprocess.run(cmd, cwd=REPO, env=env)
+        if proc.returncode != 0:
+            fail(f"quick benchmark run exited {proc.returncode}")
+
+    fresh_by_name = {}
+    for name in FILES:
+        baseline = load(BASELINE_DIR, name)
+        fresh = load(scratch, name)
+        fresh_by_name[name] = fresh
+        if baseline is not None and fresh is not None:
+            check_schema(name, baseline, fresh)
+    if fresh_by_name.get("BENCH_decode"):
+        check_decode(fresh_by_name["BENCH_decode"])
+    if fresh_by_name.get("BENCH_streaming"):
+        check_streaming(fresh_by_name["BENCH_streaming"])
+    if fresh_by_name.get("BENCH_adaptive"):
+        check_adaptive(fresh_by_name["BENCH_adaptive"])
+    if fresh_by_name.get("kernels"):
+        check_kernels(fresh_by_name["kernels"])
+        if not _failures:
+            upload_encode_rows(fresh_by_name["kernels"])
+
+    if _failures:
+        print(f"\n{len(_failures)} baseline check(s) failed")
+        return 1
+    print("\nall baseline checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,8 +5,6 @@ import json
 import os
 import time
 
-import numpy as np
-
 # BENCH_REPORT_DIR redirects artifacts to a scratch directory — how
 # tools/bench_compare.py (and CI) run quick-mode benchmarks WITHOUT
 # clobbering the committed full-mode baselines under reports/bench/

@@ -22,6 +22,7 @@ BLOCKS = {
     "decode": ("decode_bench", "BENCH_decode.json (DecoderCache / fused kernel / MC sweep)"),
     "streaming": ("streaming_bench", "BENCH_streaming.json (residual vs terminal decode)"),
     "adaptive": ("adaptive_bench", "BENCH_adaptive.json (static vs adaptive under drift/churn)"),
+    "serve": ("serve_bench", "BENCH_serve.json (trace-driven serving: SLO attainment/goodput under stragglers)"),
     "roofline": ("roofline_bench", "(stdout only: roofline summaries)"),
 }
 
@@ -35,7 +36,7 @@ def main() -> None:
                     help="reduced trial counts / grid sizes for CI")
     ap.add_argument("--only", default=None,
                     help="comma list of blocks to run: "
-                         "sim,ec2,kernels,decode,streaming,adaptive,roofline")
+                         "sim,ec2,kernels,decode,streaming,adaptive,serve,roofline")
     ap.add_argument("--dry-run", action="store_true",
                     help="print the resolved block list and the artifacts "
                          "each block writes, without executing")

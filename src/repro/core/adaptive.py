@@ -73,6 +73,7 @@ __all__ = [
     "control_margin",
     "padded_allocation",
     "ParityController",
+    "DeadlineAwareParity",
 ]
 
 _ALPHA_FLOOR = 1e-12
@@ -1588,3 +1589,119 @@ class ParityController:
     def parity_level(self, max_parity: int) -> int:
         """Shards to drop this step: the posterior-majority straggler count."""
         return int(min(max_parity, int((self.posterior > 0.5).sum())))
+
+
+class DeadlineAwareParity:
+    """Pick the per-step parity level from SLO slack + spike economics, not
+    straggler history alone (DESIGN.md §10).
+
+    The ``ParityController`` answers "how many shards does the posterior
+    believe are straggling?" — a purely backward-looking signal.  Under
+    traffic with per-request deadlines (serve/scheduler.py) the master
+    additionally knows the tightest admitted request's SLO slack, and can
+    price the one real trade the parity level controls:
+
+      dropping the FULL budget every step (fixed-parity) pays the masked
+      decode every step — the recovery matmul plus the conditioning guard
+      of a non-systematic read-off — but hedges against slow-regime
+      onsets: a kept shard that turns slow mid-step costs ~the slowdown
+      factor in deadline budget before any estimate can react;
+
+      dropping NOTHING on a conviction-free step is free and
+      best-conditioned, but keeps every shard exposed to the next onset.
+
+    The policy prices that trade from online evidence: an EW estimate of
+    the cluster-wide onset rate (posterior upcrossings) and of the spike
+    magnitude (laggard latency over the step median).  Relaxing below the
+    full budget is allowed only when (a) no shard is currently convicted,
+    (b) the window is evidenced-calm (``calm_patience`` conviction-free
+    steps), and (c) the expected onset cost of the extra kept shards —
+    onset_rate × (budget/n_blocks) × spike — is below the decode overhead
+    saved (``relax_overhead``, in units of the healthy shard time).  In a
+    violent environment the estimates veto relaxation and the policy
+    tracks fixed-parity exactly (while the engine's posterior-saturation
+    top-up can still RAISE the budget past fixed's, DESIGN.md §9); in calm
+    or mild environments it relaxes and wins the overhead back.  Scarce
+    slack escalates unconditionally: urgency = clip(1 -
+    slack/escalate_steps, 0, 1) raises the floor toward the full budget,
+    so a request about to miss its deadline never waits on an unconvicted
+    laggard.
+
+    With infinite slack (no deadline-bearing traffic) the policy is
+    EXACTLY ``controller.parity_level`` (the degradation property,
+    asserted in tests/test_serve_traffic.py), so a deployment without
+    deadlines loses nothing by wiring it in.
+    """
+
+    def __init__(
+        self,
+        controller: ParityController,
+        escalate_steps: float = 8.0,
+        calm_patience: int = 8,
+        relax_overhead: float = 0.04,
+        onset_prior: float = 8e-3,
+        spike_prior: float = 25.0,
+        rate_decay: float = 0.998,
+        spike_decay: float = 0.9,
+    ):
+        if escalate_steps <= 0 or calm_patience < 1:
+            raise ValueError("escalate_steps and calm_patience must be positive")
+        if not 0.0 < rate_decay < 1.0 or not 0.0 < spike_decay < 1.0:
+            raise ValueError("decays must be in (0, 1)")
+        if relax_overhead < 0 or onset_prior < 0 or spike_prior < 1:
+            raise ValueError("bad DeadlineAwareParity economics")
+        self.controller = controller
+        self.escalate_steps = float(escalate_steps)
+        self.calm_patience = int(calm_patience)
+        self.relax_overhead = float(relax_overhead)
+        self.rate_decay = float(rate_decay)
+        self.spike_decay = float(spike_decay)
+        self._calm_steps = 0
+        self._onset_rate = float(onset_prior)   # P(>=1 onset) per step, EW
+        self._spike = float(spike_prior)        # laggard slowdown multiple, EW
+
+    def observe(self, latency: np.ndarray) -> None:
+        lat = np.asarray(latency, dtype=np.float64)
+        prev = self.controller.posterior > 0.5
+        self.controller.observe(lat)
+        conv = self.controller.posterior > 0.5
+        # onset evidence: a shard newly crossing conviction this step
+        d = self.rate_decay
+        self._onset_rate = d * self._onset_rate + (1.0 - d) * float(
+            (conv & ~prev).any()
+        )
+        # spike magnitude: how bad is a laggard, in healthy-shard units
+        finite = np.isfinite(lat)
+        med = float(np.median(lat[finite])) if finite.any() else 1.0
+        med = max(med, 1e-300)
+        lag = (~finite) | (lat > self.controller.threshold * med)
+        if lag.any():
+            mult = float(
+                np.where(finite, lat, med * self._spike)[lag].mean() / med
+            )
+            s = self.spike_decay
+            self._spike = s * self._spike + (1.0 - s) * mult
+        self._calm_steps = 0 if conv.any() else self._calm_steps + 1
+
+    @property
+    def calm(self) -> bool:
+        """No convicted shard for the last ``calm_patience`` steps."""
+        return self._calm_steps >= self.calm_patience
+
+    def relax_worthwhile(self, max_parity: int) -> bool:
+        """Expected onset cost of keeping ``max_parity`` extra shards for a
+        step vs the masked-decode overhead those drops would cost."""
+        exposure = max_parity / max(self.controller.n_blocks, 1)
+        return self._onset_rate * exposure * self._spike < self.relax_overhead
+
+    def level(self, max_parity: int, slack_steps: float) -> int:
+        """Parity level for this step given the tightest request's slack
+        (in units of estimated steps; +inf = no deadline pressure)."""
+        base = self.controller.parity_level(max_parity)
+        if not np.isfinite(slack_steps):
+            return base
+        urgency = min(max(1.0 - slack_steps / self.escalate_steps, 0.0), 1.0)
+        floor = int(np.ceil(urgency * max_parity))
+        if base > 0 or not self.calm or not self.relax_worthwhile(max_parity):
+            floor = max_parity
+        return int(min(max_parity, max(base, floor)))

@@ -32,7 +32,7 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 __all__ = [
     "block_mds_generator",
@@ -288,18 +288,30 @@ def coded_block_matmul(
     mask: jnp.ndarray,
     n_data: int,
     n_parity: int,
+    kernel_mode: str | None = None,
 ) -> jnp.ndarray:
     """shard_map form of CodedLinear.apply — the collective schedule is
     explicit: local block matmul, all_gather of the (small) coded outputs,
     replicated tiny decode.  Bytes on the wire: n_blocks*br*batch*4, i.e.
     (1 + parity/data) x the uncoded all-gather — the coding overhead is
     visible in the HLO and charged in the roofline.
+
+    ``kernel_mode`` routes each device's LOCAL block matmul through the
+    tiled Pallas ``coded_matvec`` kernel (``'interpret'``/``'compile'``);
+    None keeps the plain XLA matmul — which is also the bit-identity
+    contract with the single-device CodedLinear path (same per-row dot
+    products, same decode_blocks arithmetic on the gathered outputs).
     """
     n_blocks = n_data + n_parity
     br = w_coded.shape[0] // n_blocks
 
     def local(wc, xc, m):
-        y_local = wc @ xc                       # [br_local, batch]
+        if kernel_mode is not None:
+            from repro.kernels.ops import coded_matvec
+
+            y_local = coded_matvec(wc, xc, mode=kernel_mode)
+        else:
+            y_local = wc @ xc                   # [br_local, batch]
         y_all = jax.lax.all_gather(y_local, axis, axis=0, tiled=True)
         y_all = y_all.reshape(n_blocks, br, -1)
         return decode_blocks(y_all, m, n_data, n_parity).reshape(n_data * br, -1)

@@ -23,6 +23,7 @@ Mode = Literal["interpret", "compile", "off"]
 __all__ = [
     "coded_matvec",
     "coded_matvec_decode",
+    "coded_head_matvec",
     "lt_encode",
     "gaussian_encode",
     "encode_rows",
@@ -46,6 +47,46 @@ def coded_matvec_decode(a, x, rec, mode: Mode = "interpret", **kw):
     if mode == "off":
         return _ref.ref_coded_matvec_decode(a, x, rec)
     return coded_matvec_decode_pallas(a, x, rec, interpret=(mode == "interpret"), **kw)
+
+
+def coded_head_matvec(
+    w_coded,
+    x,
+    mask,
+    n_data: int,
+    n_parity: int,
+    *,
+    mesh=None,
+    axis: str = "model",
+    kernel_mode: str | None = None,
+):
+    """The serving coded-head matvec, dispatched by execution geometry
+    (DESIGN.md §10).  w_coded [(n_data+n_parity)*br, in], x [in, batch],
+    mask [n_blocks] -> y [n_data*br, batch] fp32.
+
+      * ``mesh`` given — shard_map over ``axis``: one code block per
+        device, local block matmul (optionally the Pallas ``coded_matvec``
+        kernel via ``kernel_mode``), all_gather of the small coded outputs,
+        replicated mask-keyed DecoderCache decode.  Erasing a device's
+        output is exactly zeroing its block in the mask.
+      * no mesh — the single-program CodedLinear path: one fused block
+        matmul + cached decode (or the fused Pallas matmul+decode kernel
+        when ``kernel_mode`` is set).
+
+    Both paths share ``decode_blocks`` and the same generator, so the
+    sharded head is bit-identical to the single-device head on identical
+    masks (asserted in tests/test_serve_mesh.py).
+    """
+    from repro.core.coded_ops import CodedLinear, coded_block_matmul
+
+    if mesh is not None:
+        return coded_block_matmul(
+            mesh, axis, w_coded, x, mask, n_data, n_parity,
+            kernel_mode=kernel_mode,
+        )
+    br = w_coded.shape[0] // (n_data + n_parity)
+    cl = CodedLinear(n_data=n_data, n_parity=n_parity, out_features=n_data * br)
+    return cl.apply(w_coded, x, mask, kernel_mode=kernel_mode)
 
 
 def lt_encode(a, indices, coeffs, mode: Mode = "interpret", **kw):

@@ -6,7 +6,6 @@ sweeps (tests/test_kernels.py).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 __all__ = [

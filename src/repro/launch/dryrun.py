@@ -13,12 +13,20 @@ analysis (EXPERIMENTS.md §Roofline) reads.
 """
 # The dry-run (and ONLY the dry-run) needs 512 placeholder devices; jax
 # locks the device count on first init, so this MUST precede every import.
+# Inherited force flags are stripped first: XLA keeps the LAST duplicate
+# flag, and callers (e.g. a pytest parent whose conftest forces 16 devices
+# for the shard_map serving tests) would otherwise silently override the
+# 512 this launcher requires.
 import os
 
 os.environ["XLA_FLAGS"] = (
     "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", "")
-)
+    + " ".join(
+        t
+        for t in os.environ.get("XLA_FLAGS", "").split()
+        if not t.startswith("--xla_force_host_platform_device_count")
+    )
+).strip()
 
 import argparse    # noqa: E402
 import json        # noqa: E402
@@ -38,7 +46,7 @@ from repro.optim import AdamWConfig  # noqa: E402
 from repro.sharding.ctx import sharding_hints  # noqa: E402
 from repro.sharding.policy import make_policy  # noqa: E402
 from repro.train.loop import TrainConfig, make_train_step  # noqa: E402
-from repro.utils.hlo import HW_V5E, analyze_hlo, roofline  # noqa: E402
+from repro.utils.hlo import analyze_hlo, roofline  # noqa: E402
 
 SDS = jax.ShapeDtypeStruct
 
@@ -134,7 +142,6 @@ def build_cell(cfg: ModelConfig, wl: Workload, mesh, *, coded: bool = False,
             else None
         )
         step = make_train_step(model, opt_cfg, tc, grad_shardings=grad_sh)
-        from repro.train.loop import init_train_state
         from repro.optim import init_opt_state
 
         state_sds = {

@@ -53,6 +53,25 @@ def main() -> None:
                     help="pick the per-step parity level from the online "
                          "straggler posterior (DESIGN.md §8) instead of "
                          "always dropping the full parity budget")
+    ap.add_argument("--trace", choices=["none", "poisson", "bursty"],
+                    default="none",
+                    help="open-loop arrival trace (DESIGN.md §10): requests "
+                         "arrive over wall-clock time with per-request "
+                         "deadlines and admission control, instead of a "
+                         "pre-loaded queue")
+    ap.add_argument("--rate", type=float, default=2.0,
+                    help="trace mode: mean arrival rate, requests/second")
+    ap.add_argument("--slo-factor", type=float, default=4.0,
+                    help="trace mode: per-token deadline budget as a "
+                         "multiple of the nominal step time")
+    ap.add_argument("--t-token-est", type=float, default=0.05,
+                    help="trace mode: nominal per-token wall-clock seconds "
+                         "used to size deadlines (EW-corrected online)")
+    ap.add_argument("--deadline-parity", action="store_true",
+                    help="trace mode + --adaptive-parity: escalate the "
+                         "parity level from SLO slack (DESIGN.md §10's "
+                         "DeadlineAwareParity) rather than straggler "
+                         "history alone")
     ap.add_argument("--seed", type=int, default=0,
                     help="PRNG seed (params, prompts, straggler draws)")
     ap.add_argument("--dry-run", action="store_true",
@@ -61,6 +80,9 @@ def main() -> None:
     if args.adaptive_parity and not (args.coded and args.straggler_prob > 0):
         ap.error("--adaptive-parity requires --coded and --straggler-prob > 0 "
                  "(there is no straggler posterior to adapt to otherwise)")
+    if args.deadline_parity and not (args.adaptive_parity and args.trace != "none"):
+        ap.error("--deadline-parity requires --adaptive-parity and --trace "
+                 "(SLO slack only exists under a deadline-bearing trace)")
 
     from repro.configs import get_config
     from repro.models.config import coded_blocks
@@ -72,7 +94,7 @@ def main() -> None:
 
     if args.dry_run:
         n_params, _ = cfg.param_count()
-        print(f"[serve] --dry-run resolved config:")
+        print("[serve] --dry-run resolved config:")
         print(f"  arch={cfg.name} family={cfg.family} smoke={args.smoke} "
               f"params~{n_params:,.0f}")
         print(f"  d_model={cfg.d_model} n_layers={cfg.n_layers} "
@@ -83,6 +105,10 @@ def main() -> None:
         print(f"  coded={cfg.coded} parity={cfg.coded_parity if cfg.coded else 0} "
               f"shards={n_shards} straggler_prob={args.straggler_prob} "
               f"adaptive_parity={args.adaptive_parity}")
+        if args.trace != "none":
+            print(f"  traffic: trace={args.trace} rate={args.rate}/s "
+                  f"slo_factor={args.slo_factor} t_token_est={args.t_token_est}s "
+                  f"deadline_parity={args.deadline_parity}")
         return
 
     import jax
@@ -100,13 +126,21 @@ def main() -> None:
     controller = None
     if args.coded and args.straggler_prob > 0:
         if args.adaptive_parity:
-            # shard latencies with randomly-straggling shards: the posterior
+            # synthetic per-shard latencies with randomly-straggling shards,
+            # observed through the HealthMonitor's EW estimator: the mask is
+            # committed from backward-looking ESTIMATES (what a real
+            # deployment knows pre-step, DESIGN.md §10), while the posterior
             # decides how many laggards to drop each step
+            from repro.runtime.health import HealthMonitor
+
+            monitor = HealthMonitor(n_workers=n_shards)
+
             def latency_fn():
                 lat = 1e-3 * (1.0 + 0.1 * rng.random(n_shards))
                 slow = rng.random(n_shards) < args.straggler_prob
                 lat[slow] *= 50.0
-                return lat
+                monitor.observe_step_latencies(lat)
+                return monitor.shard_latencies()
 
             controller = ParityController(n_shards)
         else:
@@ -118,6 +152,48 @@ def main() -> None:
                 idx = np.flatnonzero(drop)[: args.parity]
                 m[idx] = 0.0
                 return m
+
+    if args.trace != "none":
+        # ---- trace-driven mode: open-loop arrivals + deadlines ----------
+        from repro.core.adaptive import DeadlineAwareParity
+        from repro.serve import TraceScheduler, bursty_trace, poisson_trace
+
+        mk = poisson_trace if args.trace == "poisson" else bursty_trace
+        trace = mk(args.rate, args.requests, seed=args.seed,
+                   mean_tokens=args.max_new, max_tokens=args.max_new,
+                   t_token=args.t_token_est, slo_factor=args.slo_factor)
+        payloads = [
+            Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab, args.prompt_len).astype(np.int32),
+                    max_new_tokens=int(trace.n_tokens[i]))
+            for i in range(trace.n_requests)
+        ]
+        sched = TraceScheduler(trace, args.slots, t_step_init=args.t_token_est,
+                               payloads=payloads)
+        policy = (DeadlineAwareParity(controller)
+                  if args.deadline_parity and controller is not None else None)
+        t0 = time.monotonic()
+        clock = lambda: time.monotonic() - t0  # noqa: E731
+        eng = ServeEngine(model, params, n_slots=args.slots, s_max=args.s_max,
+                          mask_fn=mask_fn, latency_fn=latency_fn,
+                          parity_controller=controller, parity_policy=policy,
+                          scheduler=sched, clock=clock)
+        while not sched.finished:
+            if eng.step() == 0:
+                nxt = sched.next_arrival()
+                if nxt is None:
+                    break
+                time.sleep(max(0.0, nxt - clock()))
+        res = sched.results()
+        dt = clock()
+        n_tok = int(res["n_tokens"][np.isfinite(res["t_complete"])].sum())
+        print(f"[serve] trace={args.trace} {trace.n_requests} requests, "
+              f"{n_tok} tokens in {dt:.2f}s ({n_tok / max(dt, 1e-9):,.1f} tok/s)")
+        print(f"  SLO attainment {res['slo_met'].mean():.1%}  "
+              f"rejected {int(res['rejected'].sum())}  "
+              f"est_step {sched.est_step_time * 1e3:.1f} ms  "
+              f"deadline_parity={policy is not None}")
+        return
 
     eng = ServeEngine(model, params, n_slots=args.slots, s_max=args.s_max,
                       mask_fn=mask_fn, latency_fn=latency_fn,

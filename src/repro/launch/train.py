@@ -88,7 +88,7 @@ def main() -> None:
     cfg = get_config(args.arch, smoke=args.smoke)
     if args.dry_run:
         n_params, n_act = cfg.param_count()
-        print(f"[train] --dry-run resolved config:")
+        print("[train] --dry-run resolved config:")
         print(f"  arch={cfg.name} family={cfg.family} smoke={args.smoke} "
               f"params~{n_params:,.0f} (active~{n_act:,.0f})")
         print(f"  devices={len(jax.devices())} steps={args.steps} "

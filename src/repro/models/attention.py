@@ -6,8 +6,6 @@ KV caches [B, S_max, KVH, Hd].  Softmax in fp32.  TP shards the head axis
 """
 from __future__ import annotations
 
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 

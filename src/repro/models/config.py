@@ -5,7 +5,7 @@ LMs; the registry (``repro.models.registry``) dispatches on ``family``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
 __all__ = ["ModelConfig", "coded_blocks"]
 

@@ -21,7 +21,6 @@ from __future__ import annotations
 
 import math
 from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -474,22 +473,31 @@ def _last_logits(
     """Last-position logits.  With ``cfg.coded`` the head matvec runs through
     the BPCC CodedLinear blocks: any ``coded_parity`` erased model-shards
     (``head_mask`` zeros) still yield exact logits — the paper's
-    straggler-tolerant matrix-vector product as the serving hot path."""
+    straggler-tolerant matrix-vector product as the serving hot path.
+
+    Inside a ``sharding.ctx.coded_head_mesh`` context the same matvec runs
+    shard_map'd over a real mesh — one code block per device, erasure =
+    dropping a device's output — via ``kernels.ops.coded_head_matvec``
+    (bit-identical to the single-program path on identical masks)."""
     last = hidden[:, -1]
     if cfg is not None and cfg.coded and "lm_head_coded" in params:
-        from repro.core.coded_ops import CodedLinear
+        from repro.kernels.ops import coded_head_matvec
+        from repro.sharding.ctx import current_coded_head_mesh
 
         n_blocks = _coded_blocks(cfg)
-        cl = CodedLinear(
-            n_data=n_blocks - cfg.coded_parity,
-            n_parity=cfg.coded_parity,
-            out_features=cfg.vocab,
-        )
         mask = head_mask if head_mask is not None else jnp.ones((n_blocks,), jnp.float32)
-        y = cl.apply(
-            params["lm_head_coded"].astype(jnp.float32), last.astype(jnp.float32).T, mask
+        cm = current_coded_head_mesh()
+        mesh, axis = cm if cm is not None else (None, "model")
+        y = coded_head_matvec(
+            params["lm_head_coded"].astype(jnp.float32),
+            last.astype(jnp.float32).T,
+            mask,
+            n_blocks - cfg.coded_parity,
+            cfg.coded_parity,
+            mesh=mesh,
+            axis=axis,
         )
-        return y.T
+        return y[: cfg.vocab].T
     head = params["lm_head"] if "lm_head" in params else params["embed"].T
     return last.astype(jnp.float32) @ head.astype(jnp.float32)
 

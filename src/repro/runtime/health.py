@@ -24,7 +24,9 @@ class HealthMonitor:
     n_workers: int
     window: int = 64                     # observations kept per worker
     prior: ShiftedExp = field(default_factory=lambda: ShiftedExp(mu=1e4, alpha=1e-4))
+    latency_decay: float = 0.6           # EW decay of per-shard step latencies
     _obs: list[deque] = field(init=False)
+    _lat: np.ndarray | None = field(init=False, default=None)
 
     def __post_init__(self):
         self._obs = [deque(maxlen=self.window) for _ in range(self.n_workers)]
@@ -35,6 +37,32 @@ class HealthMonitor:
         if rows <= 0 or seconds <= 0:
             raise ValueError("rows and seconds must be positive")
         self._obs[worker].append(seconds / rows)  # normalized seconds-per-row
+
+    def observe_step_latencies(self, latencies) -> None:
+        """One serving step's realized per-shard latencies [n_workers]
+        (np.inf = no result).  Feeds the EW estimates the serving engine's
+        ``latency_fn`` reads — the backward-looking signal the per-step
+        erasure mask is committed from (DESIGN.md §10).  Unreachable shards
+        decay toward a large-but-finite penalty so a recovered shard can
+        re-earn its place."""
+        lat = np.asarray(latencies, dtype=np.float64)
+        if lat.shape != (self.n_workers,):
+            raise ValueError(f"latencies must be [{self.n_workers}], got {lat.shape}")
+        finite = np.isfinite(lat)
+        cap = 1e3 * (np.median(lat[finite]) if finite.any() else 1.0)
+        lat = np.where(finite, lat, cap)
+        if self._lat is None:
+            self._lat = lat.copy()
+        else:
+            d = self.latency_decay
+            self._lat = d * self._lat + (1.0 - d) * lat
+
+    def shard_latencies(self) -> np.ndarray:
+        """EW per-shard step-latency estimates (the ``latency_fn`` source);
+        uniform ones before any observation."""
+        if self._lat is None:
+            return np.ones(self.n_workers)
+        return self._lat.copy()
 
     # ---- estimation -----------------------------------------------------
     def estimate(self, worker: int) -> ShiftedExp:

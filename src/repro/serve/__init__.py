@@ -1,1 +1,15 @@
 from repro.serve.engine import Request, ServeEngine  # noqa: F401
+from repro.serve.loadgen import (  # noqa: F401
+    ArrivalTrace,
+    bursty_trace,
+    poisson_trace,
+    replay_trace,
+)
+from repro.serve.scheduler import (  # noqa: F401
+    ScheduledRequest,
+    ServeSimResult,
+    ShardLatencyModel,
+    StragglerInjection,
+    TraceScheduler,
+    simulate_serve,
+)

@@ -39,7 +39,7 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable
+from typing import TYPE_CHECKING, Any, Callable
 
 import numpy as np
 
@@ -47,6 +47,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.registry import Model
+
+if TYPE_CHECKING:  # annotation-only: keeps the module import light
+    from repro.core.adaptive import DeadlineAwareParity, ParityController
+    from repro.serve.scheduler import TraceScheduler
 
 __all__ = ["Request", "ServeEngine"]
 
@@ -58,6 +62,8 @@ class Request:
     max_new_tokens: int = 16
     img_embed: np.ndarray | None = None
     out_tokens: list[int] = field(default_factory=list)
+    deadline: float | None = None    # absolute SLO (scheduler-driven mode)
+    sched_idx: int | None = None     # TraceScheduler request index
 
     @property
     def done(self) -> bool:
@@ -92,6 +98,11 @@ class ServeEngine:
         parity_topup: int = 0,
         topup_patience: int = 4,
         encode_mode: str = "interpret",
+        mesh=None,
+        head_axis: str = "model",
+        scheduler: "TraceScheduler | None" = None,
+        parity_policy: "DeadlineAwareParity | None" = None,
+        clock: Callable[[], float] | None = None,
     ):
         """``parity_topup`` allows the engine to RAISE the coded head's
         parity budget at runtime by up to that many blocks: when the
@@ -100,12 +111,39 @@ class ServeEngine:
         re-encoded with one more parity block ON DEVICE through the tiled
         Pallas encode kernel (``kernels.ops.encode_blocks_device``,
         DESIGN.md §9) — the serving analogue of the executor's reserve
-        top-up.  ``encode_mode`` is the kernel mode for those re-encodes."""
+        top-up.  ``encode_mode`` is the kernel mode for those re-encodes.
+
+        ``mesh`` shards the coded head over a real ``jax.sharding.Mesh``:
+        one code block per device along ``head_axis``, erasure = dropping a
+        device's output, decode via the mask-keyed DecoderCache — the
+        single-device path is bit-identical on identical masks (DESIGN.md
+        §10).  ``scheduler`` switches admission to a trace-driven
+        ``serve.scheduler.TraceScheduler`` (open-loop arrivals, deadlines,
+        admission control); its request payloads must be ``Request``
+        objects.  ``parity_policy`` replaces the raw ParityController level
+        with the deadline-aware rule (SLO slack from the scheduler);
+        ``clock`` supplies "now" (defaults to ``time.monotonic``; tests
+        inject a fake model-time clock)."""
         self.model, self.params = model, params
         self.n_slots, self.s_max = n_slots, s_max
         self.mask_fn = mask_fn
         self.latency_fn = latency_fn
+        if parity_policy is not None:
+            if parity_controller is None:
+                parity_controller = parity_policy.controller
+            elif parity_controller is not parity_policy.controller:
+                raise ValueError(
+                    "parity_policy wraps a different ParityController than "
+                    "the one passed explicitly"
+                )
         self.parity_controller = parity_controller
+        self.parity_policy = parity_policy
+        self.scheduler = scheduler
+        if clock is None:
+            import time
+
+            clock = time.monotonic
+        self._clock = clock
         self.parity_topup = parity_topup
         self.topup_patience = topup_patience
         self.encode_mode = encode_mode
@@ -122,25 +160,48 @@ class ServeEngine:
             from repro.models.transformer import _coded_blocks
 
             self._n_blocks = _coded_blocks(model.cfg)
+        self._mesh = mesh
+        self._head_axis = head_axis
+        if mesh is not None:
+            if not model.cfg.coded:
+                raise ValueError("mesh-sharded head requires a coded model config")
+            from repro.sharding.policy import (
+                coded_head_sharding,
+                validate_coded_head_mesh,
+            )
+
+            validate_coded_head_mesh(mesh, self._n_blocks, head_axis)
+            # place the coded head once with its block sharding so the
+            # per-step shard_map never reshards the weight
+            self.params = dict(self.params)
+            self.params["lm_head_coded"] = jax.device_put(
+                self.params["lm_head_coded"], coded_head_sharding(mesh, head_axis)
+            )
         self._bind_model(model)
         self.completed: list[Request] = []
 
     def _bind_model(self, model: Model) -> None:
         """(Re-)jit the decode/prefill steps for the given model config —
         called at init and after a parity-budget top-up re-encode."""
+        from repro.sharding.ctx import coded_head_mesh
+
         self.model = model
         s_max = self.s_max
+        mesh, axis = self._mesh, self._head_axis
 
         def _decode_argmax(params, cache, last_tok, mask):
-            logits, cache = model.decode_step(params, cache, last_tok, mask)
+            with coded_head_mesh(mesh, axis):
+                logits, cache = model.decode_step(params, cache, last_tok, mask)
             return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
 
         def _prefill_argmax(params, batch):
-            logits, cache1 = model.prefill(params, batch, s_max=s_max)
+            with coded_head_mesh(mesh, axis):
+                logits, cache1 = model.prefill(params, batch, s_max=s_max)
             return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache1
 
         self._decode = jax.jit(_decode_argmax)
         self._prefill1 = jax.jit(_prefill_argmax)
+        self._fresh_jit = True  # next decode's duration is compile time
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -179,7 +240,44 @@ class ServeEngine:
         self.slots[slot] = req
         self._active[slot] = True
 
-    def _refill(self) -> None:
+    def _refill(self, now: float | None = None) -> None:
+        if self.scheduler is not None:
+            free = int(self.n_slots - self._active.sum())
+            if free <= 0:
+                return
+            for sreq in self.scheduler.admit(now, free):
+                req = sreq.payload
+                if not isinstance(req, Request):
+                    raise TypeError(
+                        "scheduler-driven engine needs Request payloads on "
+                        "the TraceScheduler trace"
+                    )
+                if req.max_new_tokens != sreq.n_tokens:
+                    raise ValueError(
+                        f"request {req.uid}: payload token budget "
+                        f"{req.max_new_tokens} != trace n_tokens "
+                        f"{sreq.n_tokens} — the engine and scheduler would "
+                        f"disagree on completion"
+                    )
+                req.sched_idx = sreq.idx
+                req.deadline = sreq.deadline
+                slot = int(np.flatnonzero(~self._active)[0])
+                self._insert_slot(slot, req)
+                # the prefill already emitted this request's first token —
+                # which can COMPLETE a 1-token request: free its slot now,
+                # or the next decode step would emit past its budget.  The
+                # token is stamped with a FRESH clock read: the prefill
+                # (and its first-call jit compile) took real wall time, and
+                # a pre-prefill stamp would count deadline-expired requests
+                # as met
+                t_tok = self._clock()
+                done = self.scheduler.on_token(sreq.idx, t_tok)
+                if done or req.done:
+                    self.scheduler.on_finish(sreq.idx, t_tok)
+                    self.completed.append(req)
+                    self._active[slot] = False
+                    self.slots[slot] = None
+            return
         for s in range(self.n_slots):
             if not self._active[s] and self.queue:
                 self._insert_slot(s, self.queue.popleft())
@@ -214,7 +312,14 @@ class ServeEngine:
         # shallow-copy so the caller's params dict (possibly shared with
         # other engines) keeps its original-geometry coded head
         self.params = dict(self.params)
-        self.params["lm_head_coded"] = coded.astype(pdt)
+        coded = coded.astype(pdt)
+        if self._mesh is not None:
+            from repro.sharding.policy import coded_head_sharding
+
+            coded = jax.device_put(
+                coded, coded_head_sharding(self._mesh, self._head_axis)
+            )
+        self.params["lm_head_coded"] = coded
         self._bind_model(build_model(dataclasses.replace(cfg, coded_parity=new_parity)))
         self.parity_topup -= 1
         self._saturated_steps = 0
@@ -227,7 +332,8 @@ class ServeEngine:
     # ------------------------------------------------------------------
     def step(self) -> int:
         """One batched decode step; returns number of active sequences."""
-        self._refill()
+        now = self._clock() if self.scheduler is not None else None
+        self._refill(now)
         if not self._active.any():
             return 0
         self._steps += 1
@@ -245,8 +351,15 @@ class ServeEngine:
             n_par = self.model.cfg.coded_parity
             if self.parity_controller is not None:
                 # adaptive parity: drop only the shards the recent straggler
-                # posterior believes are laggards (<= the code's budget)
-                self.parity_controller.observe(lat)
+                # posterior believes are laggards (<= the code's budget).
+                # Observation goes THROUGH the deadline policy when one is
+                # wired in — its calm/onset/spike economics feed on the
+                # same stream (a controller-only observe would freeze the
+                # policy at its pessimistic priors, i.e. fixed-parity).
+                if self.parity_policy is not None:
+                    self.parity_policy.observe(lat)
+                else:
+                    self.parity_controller.observe(lat)
                 believed = int((self.parity_controller.posterior > 0.5).sum())
                 if believed > n_par and self.parity_topup > 0:
                     # more persistent stragglers than the budget covers:
@@ -258,17 +371,40 @@ class ServeEngine:
                         n_par = self.model.cfg.coded_parity
                 else:
                     self._saturated_steps = 0
-                n_par = self.parity_controller.parity_level(n_par)
+                if self.parity_policy is not None:
+                    # deadline-aware level: SLO slack (in estimated steps,
+                    # +inf without a scheduler) escalates toward the full
+                    # budget; ample slack degrades to the posterior count
+                    slack = (
+                        self.scheduler.min_slack_steps(now)
+                        if self.scheduler is not None
+                        else np.inf
+                    )
+                    n_par = self.parity_policy.level(n_par, slack)
+                else:
+                    n_par = self.parity_controller.parity_level(n_par)
             mask = jnp.asarray(
                 first_decodable_mask(lat, n_blocks - n_par, n_par), jnp.float32
             )
         elif self.mask_fn is not None and self.model.cfg.coded:
             mask = jnp.asarray(self.mask_fn(), jnp.float32)
+        # step-time measurement starts HERE: _refill's prefills (and their
+        # jit compiles) are admission work, not decode-step time
+        t_decode0 = self._clock() if self.scheduler is not None else None
         toks_dev, self.cache = self._decode(
             self.params, self.cache, self._last_tok, mask
         )
         self._last_tok = toks_dev           # feeds next step, never leaves device
         toks = np.asarray(toks_dev)         # the ONE host transfer per step
+        if self.scheduler is not None:
+            t_done = self._clock()
+            if self._fresh_jit:
+                # first decode after a (re-)jit: the duration is compile
+                # time, not a step time — feeding it would poison the EW
+                # estimate and make admission reject feasible arrivals
+                self._fresh_jit = False
+            else:
+                self.scheduler.observe_step(t_done - t_decode0)
         for s in range(self.n_slots):
             if not self._active[s]:
                 continue
@@ -276,15 +412,27 @@ class ServeEngine:
             tok = int(toks[s])
             req.out_tokens.append(tok)
             hit_eos = self.eos_token is not None and tok == self.eos_token
-            if req.done or hit_eos:
+            done_sched = False
+            if self.scheduler is not None and req.sched_idx is not None:
+                done_sched = self.scheduler.on_token(req.sched_idx, t_done)
+            if req.done or hit_eos or done_sched:
+                if self.scheduler is not None and req.sched_idx is not None:
+                    # EOS can land before the token budget: force completion
+                    self.scheduler.on_finish(req.sched_idx, t_done)
                 self.completed.append(req)
                 self._active[s] = False
                 self.slots[s] = None
         return int(self._active.sum())
 
     def run(self, max_steps: int = 10_000) -> list[Request]:
-        """Drain the queue; returns completed requests."""
+        """Drain the queue (or, with a scheduler, the trace — the caller's
+        clock must advance past arrivals; see launch.serve for the
+        wall-clock drive loop).  Returns completed requests."""
         for _ in range(max_steps):
-            if self.step() == 0 and not self.queue:
+            busy = self.step()
+            if self.scheduler is not None:
+                if self.scheduler.finished and busy == 0:
+                    break
+            elif busy == 0 and not self.queue:
                 break
         return self.completed

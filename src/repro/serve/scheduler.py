@@ -1,0 +1,493 @@
+"""Trace-driven serving scheduler: admission control, SLO slack, and the
+model-time traffic simulator (DESIGN.md §10).
+
+The paper's claim is that BPCC's partial results buy robustness against
+uncertain stragglers; on the serving side that robustness is only worth
+something if it survives *traffic* — open-loop arrivals, per-request
+deadlines, queueing.  This module is the control plane for that:
+
+  * ``TraceScheduler`` — drives an ``ArrivalTrace`` (serve/loadgen.py)
+    through a slot-limited continuous-batching engine.  Requests arrive
+    open-loop, queue in arrival order, and are admitted into free decode
+    slots at step boundaries.  Admission control rejects a request whose
+    projected completion (``now + n_tokens × est_step_time``) already
+    overshoots its deadline — a doomed request would only burn a slot that
+    a feasible one needs (goodput protection).  The scheduler never admits
+    beyond slot capacity (property-tested) and keeps an EW estimate of the
+    observed step time, which is also what converts deadline slack into
+    "slack steps" for the deadline-aware parity policy
+    (``core.adaptive.DeadlineAwareParity``).
+  * ``StragglerInjection`` / ``ShardLatencyModel`` — per-shard two-state
+    Markov straggling (healthy/slow regimes, geometric sojourns) plus
+    multiplicative noise.  The mask the engine commits to each step is
+    computed from backward-looking EW latency *estimates* (what a real
+    health monitor knows); the realized latencies are only observed after —
+    so a fresh straggler costs every policy its detection lag, and policies
+    differ only in what they do with the same information.
+  * ``simulate_serve`` — the deterministic model-time serving loop: one
+    batched decode step at a time, step duration = body compute + the
+    slowest KEPT shard's realized latency + decode/re-encode overheads.
+    It reuses the real ``ParityController`` posterior and the real
+    ``DeadlineAwareParity`` rule, so the simulated policies are the ones
+    the live engine runs, not re-implementations.
+
+Policies simulated (the serve benchmark's three arms):
+
+  uncoded   — the head is TP-sharded with no parity: every step waits for
+              the slowest of all ``n_shards`` realized latencies.
+  fixed     — parity budget ``k``: every step keeps the ``n_shards - k``
+              estimate-fastest shards and pays the masked-decode overhead.
+  adaptive  — ``DeadlineAwareParity``: parity level per step from the
+              straggler posterior AND the tightest admitted request's SLO
+              slack; healthy relaxed steps drop nobody (no overhead, best
+              conditioning), pressured steps escalate to the full budget;
+              a posterior that saturates the budget for ``topup_patience``
+              consecutive steps raises it (the serving analogue of the
+              executor's reserve top-up — one-off re-encode cost, then the
+              extra laggard is droppable).
+
+Everything is numpy + model time, deterministic in the seed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import numpy as np
+
+from repro.core.adaptive import DeadlineAwareParity, ParityController
+from repro.serve.loadgen import ArrivalTrace
+
+__all__ = [
+    "ScheduledRequest",
+    "TraceScheduler",
+    "StragglerInjection",
+    "ShardLatencyModel",
+    "ServeSimResult",
+    "simulate_serve",
+    "weighted_percentile",
+]
+
+
+def weighted_percentile(values: np.ndarray, weights: np.ndarray, q: float) -> float:
+    """THE token-latency percentile definition (one home, shared by
+    ``ServeSimResult`` and the serve benchmark's pooled cells): the
+    smallest value whose cumulative weight reaches q% of the total."""
+    values = np.asarray(values)
+    if values.size == 0:
+        return float("nan")
+    order = np.argsort(values, kind="stable")
+    cw = np.cumsum(np.asarray(weights, np.float64)[order])
+    k = int(np.searchsorted(cw, q / 100.0 * cw[-1]))
+    return float(values[order][min(k, len(order) - 1)])
+
+
+# --------------------------------------------------------------------------
+# Scheduler
+# --------------------------------------------------------------------------
+@dataclass
+class ScheduledRequest:
+    """One request's lifecycle under the scheduler (all times absolute)."""
+
+    idx: int
+    t_arrival: float
+    n_tokens: int
+    deadline: float
+    payload: Any = None  # engine-side attachment (prompt Request)
+    t_admit: float = np.nan
+    t_complete: float = np.inf
+    tokens_done: int = 0
+    rejected: bool = False
+
+    @property
+    def admitted(self) -> bool:
+        return np.isfinite(self.t_admit)
+
+    @property
+    def done(self) -> bool:
+        return np.isfinite(self.t_complete)
+
+    @property
+    def slo_met(self) -> bool:
+        return self.done and self.t_complete <= self.deadline
+
+    @property
+    def remaining(self) -> int:
+        return self.n_tokens - self.tokens_done
+
+
+class TraceScheduler:
+    """Open-loop admission control over an ``ArrivalTrace``.
+
+    The driver (simulator or live engine) calls, per step boundary:
+
+      ``admit(now, free_slots)``  -> requests to insert (never more than
+                                     ``free_slots``, never beyond capacity)
+      ``on_token(idx, now)``      -> one token emitted for an active request
+                                     (records completion when the last one
+                                     lands)
+      ``observe_step(dt)``        -> EW update of the step-time estimate
+
+    ``min_slack_steps(now)`` is the deadline-aware parity policy's input:
+    the tightest admitted request's (deadline - now)/est_step - remaining,
+    +inf when nothing is active.
+    """
+
+    def __init__(
+        self,
+        trace: ArrivalTrace,
+        n_slots: int,
+        *,
+        t_step_init: float = 1.0,
+        ew_decay: float = 0.8,
+        admission: str = "deadline",
+        payloads: list | None = None,
+    ):
+        if n_slots < 1:
+            raise ValueError("need at least one slot")
+        if admission not in ("deadline", "all"):
+            raise ValueError(f"admission must be deadline|all, got {admission!r}")
+        if not 0.0 <= ew_decay < 1.0 or t_step_init <= 0:
+            raise ValueError("bad scheduler config")
+        if payloads is not None and len(payloads) != trace.n_requests:
+            raise ValueError("payloads length must match the trace")
+        self.trace = trace
+        self.n_slots = int(n_slots)
+        self.admission = admission
+        self._ew_decay = float(ew_decay)
+        self._est = float(t_step_init)
+        self.requests = [
+            ScheduledRequest(
+                idx=i,
+                t_arrival=float(trace.t_arrival[i]),
+                n_tokens=int(trace.n_tokens[i]),
+                deadline=float(trace.deadline[i]),
+                payload=payloads[i] if payloads is not None else None,
+            )
+            for i in range(trace.n_requests)
+        ]
+        self._next = 0  # trace cursor (arrival order)
+        self._active: dict[int, ScheduledRequest] = {}
+
+    # ---- state views ----------------------------------------------------
+    @property
+    def est_step_time(self) -> float:
+        return self._est
+
+    @property
+    def n_active(self) -> int:
+        return len(self._active)
+
+    @property
+    def free_slots(self) -> int:
+        return self.n_slots - self.n_active
+
+    @property
+    def finished(self) -> bool:
+        """Every request is either completed or rejected."""
+        return self._next >= len(self.requests) and not self._active
+
+    def next_arrival(self) -> float | None:
+        """Arrival time of the next not-yet-admitted request (None if the
+        trace is exhausted)."""
+        if self._next >= len(self.requests):
+            return None
+        return self.requests[self._next].t_arrival
+
+    def min_slack_steps(self, now: float) -> float:
+        """Tightest admitted request's deadline slack, in estimated steps."""
+        if not self._active:
+            return np.inf
+        est = max(self._est, 1e-12)
+        return min(
+            (r.deadline - now) / est - r.remaining for r in self._active.values()
+        )
+
+    # ---- driver hooks ---------------------------------------------------
+    def observe_step(self, dt: float) -> None:
+        """EW estimate of the per-step time (slack conversion + admission)."""
+        if dt <= 0:
+            return
+        d = self._ew_decay
+        self._est = d * self._est + (1.0 - d) * float(dt)
+
+    def admit(
+        self, now: float, free_slots: int | None = None
+    ) -> list[ScheduledRequest]:
+        """Admit queued arrivals (arrival <= now) into free slots, in
+        arrival order.  Infeasible requests — projected completion already
+        past the deadline — are rejected without consuming a slot.  The
+        returned list never exceeds the free capacity, and total admitted
+        occupancy never exceeds ``n_slots`` (the property test's invariant).
+        """
+        cap = (
+            self.free_slots if free_slots is None else min(free_slots, self.free_slots)
+        )
+        out: list[ScheduledRequest] = []
+        while cap > 0 and self._next < len(self.requests):
+            req = self.requests[self._next]
+            if req.t_arrival > now:
+                break
+            self._next += 1
+            if (
+                self.admission == "deadline"
+                and now + req.n_tokens * self._est > req.deadline
+            ):
+                req.rejected = True
+                continue
+            req.t_admit = now
+            self._active[req.idx] = req
+            out.append(req)
+            cap -= 1
+        assert self.n_active <= self.n_slots
+        return out
+
+    def on_token(self, idx: int, now: float) -> bool:
+        """One token emitted for active request ``idx`` at time ``now``;
+        returns True when the request just completed (slot is freed)."""
+        req = self._active[idx]
+        req.tokens_done += 1
+        if req.tokens_done >= req.n_tokens:
+            req.t_complete = now
+            del self._active[idx]
+            return True
+        return False
+
+    def on_finish(self, idx: int, now: float) -> None:
+        """Force-complete an active request (engine-side early finish, e.g.
+        EOS before the token budget).  No-op if already completed."""
+        req = self._active.pop(idx, None)
+        if req is not None and not req.done:
+            req.t_complete = now
+
+    def active_requests(self) -> list[ScheduledRequest]:
+        return list(self._active.values())
+
+    # ---- outcome arrays -------------------------------------------------
+    def results(self) -> dict[str, np.ndarray]:
+        return {
+            "t_arrival": np.array([r.t_arrival for r in self.requests]),
+            "t_admit": np.array([r.t_admit for r in self.requests]),
+            "t_complete": np.array([r.t_complete for r in self.requests]),
+            "deadline": np.array([r.deadline for r in self.requests]),
+            "n_tokens": np.array([r.n_tokens for r in self.requests], np.int64),
+            "slo_met": np.array([r.slo_met for r in self.requests], bool),
+            "rejected": np.array([r.rejected for r in self.requests], bool),
+        }
+
+
+# --------------------------------------------------------------------------
+# Shard latency model (straggler injection)
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class StragglerInjection:
+    """Per-shard two-state Markov straggling.
+
+    onset       — per-shard per-step probability a healthy shard turns slow
+                  (stationary slow fraction = onset·persistence /
+                  (1 + onset·persistence)).
+    slow_factor — latency multiplier while slow.
+    persistence — mean steps a slow regime lasts (geometric sojourn).
+    noise       — multiplicative healthy jitter: latency × (1 + noise·U).
+    """
+
+    onset: float
+    slow_factor: float = 50.0
+    persistence: float = 25.0
+    noise: float = 0.1
+
+    def __post_init__(self):
+        if not 0.0 <= self.onset < 1.0 or self.slow_factor < 1.0:
+            raise ValueError(f"bad injection {self}")
+        if self.persistence < 1.0 or self.noise < 0.0:
+            raise ValueError(f"bad injection {self}")
+
+
+class ShardLatencyModel:
+    """Seeded per-step shard latencies under ``StragglerInjection``."""
+
+    def __init__(
+        self,
+        n_shards: int,
+        t_shard: float,
+        injection: StragglerInjection | None,
+        seed: int = 0,
+    ):
+        self.n_shards = int(n_shards)
+        self.t_shard = float(t_shard)
+        self.injection = injection
+        self._rng = np.random.default_rng(seed)
+        self.slow = np.zeros(self.n_shards, bool)
+
+    def step(self) -> np.ndarray:
+        """Advance regimes one step and draw this step's realized latencies."""
+        inj = self.injection
+        lat = self.t_shard * (
+            1.0 + (inj.noise if inj else 0.1) * self._rng.random(self.n_shards)
+        )
+        if inj is not None and inj.onset > 0.0:
+            u = self._rng.random(self.n_shards)
+            recover = self.slow & (u < 1.0 / inj.persistence)
+            onset = ~self.slow & (u < inj.onset)
+            self.slow = (self.slow & ~recover) | onset
+            lat = np.where(self.slow, lat * inj.slow_factor, lat)
+        return lat
+
+
+# --------------------------------------------------------------------------
+# The model-time serving simulator
+# --------------------------------------------------------------------------
+@dataclass
+class ServeSimResult:
+    """One policy's full run over a trace (absolute model time)."""
+
+    policy: str
+    t_complete: np.ndarray  # [R] inf where rejected
+    t_admit: np.ndarray  # [R] nan where rejected
+    slo_met: np.ndarray  # [R] bool
+    rejected: np.ndarray  # [R] bool
+    step_times: np.ndarray  # [S] per-step durations
+    step_tokens: np.ndarray  # [S] tokens emitted per step
+    parity_levels: np.ndarray  # [S] shards dropped per step
+    topups: int  # parity-budget raises performed
+    makespan: float
+    attainment: float  # fraction of ALL requests meeting their SLO
+    goodput: float  # SLO-met tokens per model-time unit
+    throughput: float  # all completed tokens per model-time unit
+
+    def token_latency_percentile(self, q: float) -> float:
+        """Percentile of per-token decode latency (each emitted token's
+        latency is the duration of the step that produced it)."""
+        return weighted_percentile(self.step_times, self.step_tokens, q)
+
+
+def simulate_serve(
+    trace: ArrivalTrace,
+    policy: str,
+    *,
+    n_shards: int = 16,
+    parity: int = 4,
+    n_slots: int = 8,
+    t_body: float = 0.5,
+    t_shard: float = 0.5,
+    injection: StragglerInjection | None = None,
+    seed: int = 0,
+    decode_overhead: float = 0.03,
+    reencode_cost: float = 30.0,
+    parity_max: int = 8,
+    topup_patience: int = 4,
+    escalate_steps: float = 8.0,
+    controller_decay: float = 0.45,
+    est_decay: float = 0.5,
+    admission: str = "deadline",
+    max_steps: int = 500_000,
+) -> ServeSimResult:
+    """Deterministic model-time run of one policy over one trace.
+
+    Step anatomy (one batched decode step for every active slot):
+
+      T = t_body                       (attention/MLP stack, unsharded here)
+        + max over KEPT shards of the realized head-shard latency
+        + decode_overhead              (iff any shard was dropped: the
+                                        recovery matmul + conditioning guard
+                                        of the non-systematic read-off)
+        + reencode_cost                (iff this step raised the parity
+                                        budget: one on-device re-encode +
+                                        re-jit, the engine's ``_raise_parity``)
+
+    The kept set is the ``n_shards - nu`` fastest by the EW latency
+    ESTIMATE (what ``first_decodable_mask`` sees in the live engine); the
+    realized latencies are only revealed after the mask commits, so a fresh
+    straggler costs every policy the same detection lag.
+    """
+    if policy not in ("uncoded", "fixed", "adaptive"):
+        raise ValueError(f"policy must be uncoded|fixed|adaptive, got {policy!r}")
+    if not 0 <= parity <= parity_max < n_shards:
+        raise ValueError("need 0 <= parity <= parity_max < n_shards")
+    shards = ShardLatencyModel(n_shards, t_shard, injection, seed=seed)
+    nominal = t_body + t_shard * (1.0 + 0.5 * (injection.noise if injection else 0.1))
+    sched = TraceScheduler(trace, n_slots, t_step_init=nominal, admission=admission)
+    # a reactive posterior (decay ~0.45: one laggard step convicts, one
+    # healthy step acquits) keeps the adaptive policy's detection lag at
+    # the same single step the EW estimate already costs every policy
+    dap = DeadlineAwareParity(
+        ParityController(n_shards, decay=controller_decay),
+        escalate_steps=escalate_steps,
+    )
+    lat_est = np.full(n_shards, t_shard * 1.05)  # EW latency estimates
+    budget = int(parity)
+    saturated = 0
+    topups = 0
+    t = 0.0
+    step_times: list[float] = []
+    step_tokens: list[int] = []
+    parity_levels: list[int] = []
+    for _ in range(max_steps):
+        if sched.finished:
+            break
+        sched.admit(t)
+        if sched.n_active == 0:
+            nxt = sched.next_arrival()
+            if nxt is None:
+                break
+            t = max(t, nxt)
+            continue
+        # ---- choose this step's parity level from ESTIMATES only --------
+        extra = 0.0
+        if policy == "uncoded":
+            nu = 0
+        elif policy == "fixed":
+            nu = budget
+        else:
+            believed = int((dap.controller.posterior > 0.5).sum())
+            if believed > budget:
+                saturated += 1
+                if saturated >= topup_patience and budget < parity_max:
+                    budget += 1
+                    topups += 1
+                    saturated = 0
+                    extra += reencode_cost
+            else:
+                saturated = 0
+            nu = dap.level(budget, sched.min_slack_steps(t))
+        kept = np.argsort(lat_est, kind="stable")[: n_shards - nu]
+        # ---- realize the step -------------------------------------------
+        lat = shards.step()
+        wait = float(lat[kept].max())
+        dt = t_body + wait + (decode_overhead if nu > 0 else 0.0) + extra
+        t += dt
+        # monitoring sees every shard's completion (late results still
+        # arrive); estimates and the posterior update from realized times
+        d = est_decay
+        lat_est = d * lat_est + (1.0 - d) * lat
+        dap.observe(lat)
+        sched.observe_step(dt)
+        emitted = 0
+        for req in sched.active_requests():
+            sched.on_token(req.idx, t)
+            emitted += 1
+        step_times.append(dt)
+        step_tokens.append(emitted)
+        parity_levels.append(nu)
+    else:
+        raise RuntimeError(f"simulate_serve exceeded max_steps={max_steps}")
+    res = sched.results()
+    makespan = max(t - float(trace.t_arrival[0]), 1e-12)
+    good_tokens = int(res["n_tokens"][res["slo_met"]].sum())
+    done = np.isfinite(res["t_complete"])
+    done_tokens = int(res["n_tokens"][done].sum())
+    return ServeSimResult(
+        policy=policy,
+        t_complete=res["t_complete"],
+        t_admit=res["t_admit"],
+        slo_met=res["slo_met"],
+        rejected=res["rejected"],
+        step_times=np.asarray(step_times),
+        step_tokens=np.asarray(step_tokens, np.int64),
+        parity_levels=np.asarray(parity_levels, np.int64),
+        topups=topups,
+        makespan=makespan,
+        attainment=float(res["slo_met"].mean()) if len(res["slo_met"]) else 1.0,
+        goodput=good_tokens / makespan,
+        throughput=done_tokens / makespan,
+    )

@@ -14,6 +14,12 @@ import jax
 
 _HINTS: ContextVar[dict | None] = ContextVar("sharding_hints", default=None)
 
+# (mesh, axis) the coded LM head should shard_map over — installed by the
+# serving engine around its jitted step traces (DESIGN.md §10).  Unset, the
+# head runs the single-program CodedLinear path; model code stays
+# mesh-agnostic either way.
+_CODED_HEAD: ContextVar[tuple | None] = ContextVar("coded_head_mesh", default=None)
+
 
 def current_hints() -> dict | None:
     return _HINTS.get()
@@ -26,6 +32,27 @@ def sharding_hints(hints: dict):
         yield
     finally:
         _HINTS.reset(token)
+
+
+def current_coded_head_mesh() -> tuple | None:
+    """(mesh, axis_name) for the mesh-sharded coded head, or None."""
+    return _CODED_HEAD.get()
+
+
+@contextlib.contextmanager
+def coded_head_mesh(mesh, axis: str = "model"):
+    """Route the coded LM-head matvec through ``shard_map`` over ``mesh``:
+    one code block per device along ``axis``, erasure = dropping a device's
+    output, decode via the mask-keyed DecoderCache (replicated).  A None
+    mesh is a no-op, so callers can thread an optional mesh straight in."""
+    if mesh is None:
+        yield
+        return
+    token = _CODED_HEAD.set((mesh, axis))
+    try:
+        yield
+    finally:
+        _CODED_HEAD.reset(token)
 
 
 def shard_hint(x: jax.Array, name: str) -> jax.Array:

@@ -33,12 +33,21 @@ import math
 from dataclasses import dataclass
 from typing import Any
 
+import numpy as np
+
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.config import ModelConfig
 
-__all__ = ["ShardingPolicy", "make_policy", "param_specs"]
+__all__ = [
+    "ShardingPolicy",
+    "make_policy",
+    "param_specs",
+    "serve_head_mesh",
+    "coded_head_sharding",
+    "validate_coded_head_mesh",
+]
 
 
 def _path_str(path) -> str:
@@ -267,3 +276,42 @@ def make_policy(
 
 def param_specs(shapes: Any, mesh: Mesh, **kw) -> Any:
     return make_policy(mesh, **kw).param_specs(shapes)
+
+
+# --------------------------------------------------------------------------
+# Coded serving head: one code block per device (DESIGN.md §10)
+# --------------------------------------------------------------------------
+def serve_head_mesh(n_blocks: int, axis: str = "model") -> Mesh:
+    """A 1-D serving mesh with one device per coded head block.
+
+    The coded LM head's erasure unit is the BLOCK; putting exactly one
+    block on each device makes "a device straggled/died" and "a block is
+    erased" the same event — the geometry the shard_map head assumes."""
+    devs = jax.devices()
+    if len(devs) < n_blocks:
+        raise ValueError(
+            f"serve_head_mesh needs {n_blocks} devices (one per code "
+            f"block), have {len(devs)}"
+        )
+    return Mesh(np.array(devs[:n_blocks]), (axis,))
+
+
+def validate_coded_head_mesh(mesh: Mesh, n_blocks: int, axis: str = "model") -> None:
+    """Assert the one-block-per-device geometry the shard_map head needs."""
+    if axis not in mesh.axis_names:
+        raise ValueError(f"mesh has no {axis!r} axis (axes: {mesh.axis_names})")
+    size = mesh.shape[axis]
+    if size != n_blocks:
+        raise ValueError(
+            f"coded head has {n_blocks} blocks but mesh axis {axis!r} has "
+            f"{size} devices; the sharded head wants exactly one block per "
+            f"device (erasure = dropping a device's output)"
+        )
+
+
+def coded_head_sharding(mesh: Mesh, axis: str = "model") -> NamedSharding:
+    """Sharding for ``lm_head_coded`` [n_blocks*br, in]: blocks over ``axis``.
+
+    Placing the coded weight ONCE with this sharding keeps the per-step
+    shard_map from resharding it on every decode."""
+    return NamedSharding(mesh, P(axis, None))

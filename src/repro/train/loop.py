@@ -15,7 +15,7 @@ activation hints in ``repro.sharding.ctx``.  Straggler tolerance:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

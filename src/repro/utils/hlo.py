@@ -27,7 +27,6 @@ ICI (assignment-specified).
 """
 from __future__ import annotations
 
-import json
 import re
 from dataclasses import dataclass, field
 

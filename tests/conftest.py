@@ -1,8 +1,42 @@
-"""Shared fixtures.  NOTE: no XLA_FLAGS device forcing here — smoke tests
-and benches must see the real (single) device; only launch/dryrun.py forces
-512 placeholder devices, in its own process."""
+"""Shared fixtures + the deterministic multi-device test environment.
+
+The coded serving head is 16 blocks wide (one per TP shard), and its
+shard_map tests need a mesh with one code block per device.  pytest imports
+this conftest before any test module, i.e. BEFORE the first jax import, so
+forcing host-platform devices here makes those tests runnable and
+deterministic in CI instead of depending on an XLA_FLAGS export someone
+remembered to set.  An explicit force in the environment wins (so CI can
+experiment), and subprocess tests (test_multidevice, the dryrun launcher)
+install their own counts in their own processes.
+
+Single-device behaviour is unchanged for everything else: jit without
+shardings still places on device 0, and wall-clock benchmarks run outside
+pytest.  Tests that need a bigger mesh than the forced count must
+``require_devices(n)`` — a skip-with-reason, never a hang or a cryptic
+mesh error.
+"""
+import os
+
+FORCED_DEVICES = 16  # the serving head's block count (models.config.coded_blocks)
+
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={FORCED_DEVICES}"
+    ).strip()
+
 import numpy as np
 import pytest
+
+
+def require_devices(n: int) -> None:
+    """Skip (with the reason) when fewer than ``n`` jax devices exist."""
+    import jax
+
+    have = len(jax.devices())
+    if have < n:
+        pytest.skip(f"needs {n} devices for the mesh, have {have} "
+                    f"(XLA_FLAGS force not in effect?)")
 
 
 @pytest.fixture

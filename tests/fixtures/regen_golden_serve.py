@@ -1,0 +1,55 @@
+"""Regenerate golden_serve_trace.json (run from repo root):
+
+    PYTHONPATH=src python tests/fixtures/regen_golden_serve.py
+
+Commit the diff ONLY for an intentional serving-simulator behaviour change
+— the fixture pins one trace's per-request completion times under the
+adaptive policy (DESIGN.md §10)."""
+import json
+import os
+
+import numpy as np
+
+from repro.serve.loadgen import poisson_trace
+from repro.serve.scheduler import StragglerInjection, simulate_serve
+
+SPEC = {
+    "rate": 0.22,
+    "n_requests": 40,
+    "trace_seed": 5,
+    "mean_tokens": 24.0,
+    "max_tokens": 128,
+    "policy": "adaptive",
+    "inj_seed": 9,
+    "injection": {"onset": 0.002, "slow_factor": 50.0, "persistence": 150.0},
+}
+
+
+def main() -> None:
+    trace = poisson_trace(
+        SPEC["rate"],
+        SPEC["n_requests"],
+        seed=SPEC["trace_seed"],
+        mean_tokens=SPEC["mean_tokens"],
+        max_tokens=SPEC["max_tokens"],
+    )
+    r = simulate_serve(
+        trace,
+        SPEC["policy"],
+        injection=StragglerInjection(**SPEC["injection"]),
+        seed=SPEC["inj_seed"],
+    )
+    out = dict(SPEC)
+    out["t_complete"] = [
+        round(float(t), 9) if np.isfinite(t) else -1.0 for t in r.t_complete
+    ]
+    out["topups"] = int(r.topups)
+    out["attainment"] = round(float(r.attainment), 9)
+    path = os.path.join(os.path.dirname(__file__), "golden_serve_trace.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {path}: attainment={out['attainment']}, topups={out['topups']}")
+
+
+if __name__ == "__main__":
+    main()

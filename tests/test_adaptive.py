@@ -36,7 +36,6 @@ from repro.core.adaptive import (
 )
 from repro.core.allocation import allocate, bpcc_allocation
 from repro.core.distributions import ShiftedExp, sample_heterogeneous_cluster
-from repro.core.encoding import required_rows
 from repro.core.simulator import (
     batch_arrival_schedule,
     sample_rates,

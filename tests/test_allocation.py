@@ -8,7 +8,6 @@ except ImportError:  # image without hypothesis: deterministic shim (minihyp)
 
 from repro.core.allocation import (
     bpcc_allocation,
-    beta,
     eq7_lhs,
     hcmm_allocation,
     lambda_infimum,
@@ -16,7 +15,6 @@ from repro.core.allocation import (
     load_balanced_allocation,
     load_infimum,
     solve_lambda,
-    tau_star,
     tau_star_infimum,
     tau_star_supremum,
     uniform_allocation,

@@ -3,13 +3,11 @@ import itertools
 
 import numpy as np
 import jax.numpy as jnp
-import pytest
 
 from repro.core.coded_ops import (
     CodedLinear,
     block_mds_generator,
     bpcc_batched_matvec,
-    decode_blocks,
     encode_blocks,
     row_coded_matvec,
 )

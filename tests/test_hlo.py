@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.utils.hlo import analyze_hlo, collective_bytes, roofline, HW_V5E
+from repro.utils.hlo import analyze_hlo, collective_bytes, roofline
 
 
 def test_xla_cost_analysis_counts_scan_once():
@@ -86,7 +86,6 @@ def test_collective_bytes_text_parser():
 
 def test_analyzer_counts_sharded_collectives():
     """A sharded matmul inside a scan: collectives x trip count."""
-    import os
     if len(jax.devices()) < 2:
         pytest.skip("needs >1 device (run via test_multidevice subprocess)")
 

@@ -1,8 +1,5 @@
 """Sharding policy: divisibility fit, fallbacks, opt-state inheritance."""
-import numpy as np
 import jax
-import jax.numpy as jnp
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config

@@ -97,6 +97,28 @@ def test_health_monitor_reallocation_and_mask():
     assert w[3] == min(w)
 
 
+def test_health_monitor_shard_latency_ew():
+    """The serving-side EW latency estimates (DESIGN.md §10): masks are
+    committed from these backward-looking values, so a fresh straggler
+    shows up with one step of lag and a recovered shard re-earns its
+    place instead of being pinned at +inf."""
+    hm = HealthMonitor(n_workers=4, latency_decay=0.5)
+    assert np.array_equal(hm.shard_latencies(), np.ones(4))  # pre-observation
+    hm.observe_step_latencies([1.0, 1.0, 1.0, 1.0])
+    assert np.allclose(hm.shard_latencies(), 1.0)
+    hm.observe_step_latencies([1.0, 1.0, 1.0, 9.0])
+    est = hm.shard_latencies()
+    assert est[3] == 5.0 and np.allclose(est[:3], 1.0)  # EW, not snap
+    hm.observe_step_latencies([1.0, 1.0, 1.0, np.inf])  # unreachable shard
+    assert np.isfinite(hm.shard_latencies()).all()      # capped, recoverable
+    assert hm.shard_latencies()[3] > 100.0
+    for _ in range(20):
+        hm.observe_step_latencies([1.0, 1.0, 1.0, 1.0])
+    assert hm.shard_latencies()[3] < 1.5                # re-earned its place
+    with pytest.raises(ValueError):
+        hm.observe_step_latencies([1.0, 1.0])
+
+
 def test_plan_mesh_shape():
     assert plan_mesh_shape(256, model=16) == ((16, 16), ("data", "model"))
     assert plan_mesh_shape(240, model=16) == ((15, 16), ("data", "model"))

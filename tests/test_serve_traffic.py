@@ -1,0 +1,296 @@
+"""Traffic-scale serving: load generation, scheduler properties, the
+deadline-aware parity rule, and the model-time serving simulator
+(DESIGN.md §10).  Pure numpy — no jax; the engine-side integration lives
+in tests/test_serve_mesh.py."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hermetic container: deterministic mini shim
+    from minihyp import given, settings, strategies as st
+
+from repro.core.adaptive import DeadlineAwareParity, ParityController
+from repro.serve.loadgen import bursty_trace, poisson_trace, replay_trace
+from repro.serve.scheduler import (
+    ShardLatencyModel,
+    StragglerInjection,
+    TraceScheduler,
+    simulate_serve,
+)
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures", "golden_serve_trace.json")
+
+
+# --------------------------------------------------------------------------
+# load generation
+# --------------------------------------------------------------------------
+def test_traces_are_seed_deterministic_and_valid():
+    for mk in (poisson_trace, bursty_trace):
+        a = mk(0.3, 100, seed=4)
+        b = mk(0.3, 100, seed=4)
+        c = mk(0.3, 100, seed=5)
+        assert np.array_equal(a.t_arrival, b.t_arrival)
+        assert np.array_equal(a.n_tokens, b.n_tokens)
+        assert not np.array_equal(a.t_arrival, c.t_arrival)
+        assert (np.diff(a.t_arrival) >= 0).all()
+        assert (a.deadline > a.t_arrival).all()
+        assert (a.n_tokens >= 1).all()
+
+
+def test_bursty_trace_matches_poisson_mean_rate():
+    """The MMPP is calibrated so its time-average rate equals the base."""
+    rate = 0.5
+    p = poisson_trace(rate, 4000, seed=0)
+    b = bursty_trace(rate, 4000, seed=0)
+    rp = p.n_requests / p.t_arrival[-1]
+    rb = b.n_requests / b.t_arrival[-1]
+    assert abs(rb - rp) / rp < 0.15
+    # but the bursty trace queues deeper: its max windowed rate is higher
+    win = 50.0
+    peak = lambda t: max(  # noqa: E731
+        int(((t >= lo) & (t < lo + win)).sum()) for lo in t[:: max(1, len(t) // 64)]
+    )
+    assert peak(b.t_arrival) > 1.5 * peak(p.t_arrival)
+
+
+def test_replay_trace_roundtrip_and_validation():
+    t = np.array([0.0, 1.0, 2.5])
+    n = np.array([4, 2, 8])
+    tr = replay_trace(t, n, t_token=1.0, slo_factor=3.0, queue_grace=10.0)
+    assert np.array_equal(tr.deadline, t + 10.0 + 3.0 * n)
+    with pytest.raises(ValueError):
+        replay_trace(t[::-1].copy(), n)  # unsorted
+    with pytest.raises(ValueError):
+        replay_trace(t, np.zeros(3, np.int64))  # zero tokens
+    with pytest.raises(ValueError):
+        replay_trace(t, n, deadline=t)  # deadline <= arrival
+
+
+# --------------------------------------------------------------------------
+# scheduler properties
+# --------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    n_slots=st.integers(min_value=1, max_value=9),
+    rate=st.floats(min_value=0.05, max_value=2.0),
+)
+def test_admission_never_exceeds_slot_capacity(seed, n_slots, rate):
+    """THE scheduler invariant: at no point do admitted-active requests
+    exceed the slot count, regardless of trace shape or step pacing."""
+    trace = poisson_trace(rate, 60, seed=seed, mean_tokens=6, max_tokens=24)
+    sched = TraceScheduler(trace, n_slots)
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    guard = 0
+    while not sched.finished and guard < 10_000:
+        guard += 1
+        admitted = sched.admit(t)
+        assert len(admitted) <= n_slots
+        assert sched.n_active <= n_slots
+        if sched.n_active == 0:
+            nxt = sched.next_arrival()
+            if nxt is None:
+                break
+            t = max(t, nxt)
+            continue
+        dt = float(rng.uniform(0.2, 3.0))
+        t += dt
+        sched.observe_step(dt)
+        for req in sched.active_requests():
+            sched.on_token(req.idx, t)
+    assert sched.finished or guard == 10_000
+    res = sched.results()
+    # every request resolved exactly one way
+    assert ((res["rejected"]) | np.isfinite(res["t_complete"])).all()
+    assert not (res["rejected"] & np.isfinite(res["t_complete"])).any()
+
+
+def test_admission_rejects_only_infeasible_and_preserves_order():
+    trace = replay_trace(
+        np.array([0.0, 0.0, 0.0]),
+        np.array([4, 100, 4]),
+        deadline=np.array([100.0, 5.0, 100.0]),  # middle one cannot make it
+    )
+    sched = TraceScheduler(trace, 2, t_step_init=1.0)
+    admitted = sched.admit(0.0)
+    assert [r.idx for r in admitted] == [0, 2]
+    assert sched.requests[1].rejected
+    assert sched.n_active == 2
+
+
+def test_min_slack_steps_tracks_tightest_request():
+    trace = replay_trace(
+        np.array([0.0, 0.0]), np.array([10, 2]), deadline=np.array([100.0, 4.0])
+    )
+    sched = TraceScheduler(trace, 4, t_step_init=1.0)
+    sched.admit(0.0)
+    # req 1: (4 - 0)/1 - 2 = 2 steps of slack; req 0: 100 - 10 = 90
+    assert sched.min_slack_steps(0.0) == pytest.approx(2.0)
+    sched.on_token(1, 1.0)
+    sched.on_token(1, 2.0)  # completes req 1
+    assert sched.min_slack_steps(2.0) == pytest.approx(88.0)
+    assert np.isfinite(sched.requests[1].t_complete)
+
+
+def test_on_finish_forces_early_completion():
+    trace = replay_trace(np.array([0.0]), np.array([10]))
+    sched = TraceScheduler(trace, 1)
+    sched.admit(0.0)
+    sched.on_token(0, 1.0)
+    sched.on_finish(0, 2.0)  # engine hit EOS early
+    assert sched.finished
+    assert sched.requests[0].t_complete == 2.0
+
+
+# --------------------------------------------------------------------------
+# deadline-aware parity
+# --------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    steps=st.integers(min_value=1, max_value=40),
+    budget=st.integers(min_value=1, max_value=8),
+)
+def test_deadline_parity_degrades_to_controller_at_infinite_slack(seed, steps, budget):
+    """THE degradation property: with no deadline pressure the policy IS
+    the ParityController, observation stream for observation stream."""
+    rng = np.random.default_rng(seed)
+    n = 16
+    ctrl_ref = ParityController(n)
+    dap = DeadlineAwareParity(ParityController(n))
+    for _ in range(steps):
+        lat = 1e-3 * (1.0 + 0.1 * rng.random(n))
+        lat[rng.random(n) < 0.2] *= 40.0
+        ctrl_ref.observe(lat)
+        dap.observe(lat)
+        assert dap.level(budget, np.inf) == ctrl_ref.parity_level(budget)
+
+
+def test_deadline_parity_escalates_under_pressure_and_evidence():
+    n, budget = 16, 4
+    dap = DeadlineAwareParity(ParityController(n))
+    healthy = np.full(n, 1e-3)
+    for _ in range(50):
+        dap.observe(healthy)
+    # zero slack: full budget regardless of a clean posterior
+    assert dap.level(budget, 0.0) == budget
+    # scarce slack interpolates
+    assert 0 < dap.level(budget, dap.escalate_steps / 2) <= budget
+    # straggler evidence (a conviction) also forces the full budget
+    slow = healthy.copy()
+    slow[3] *= 100.0
+    for _ in range(3):
+        dap.observe(slow)
+    assert not dap.calm
+    assert dap.level(budget, 1e9) == budget
+
+
+def test_deadline_parity_relaxes_only_when_economics_allow():
+    n, budget = 16, 4
+    # cheap environment: rare mild spikes -> relaxation worthwhile
+    dap = DeadlineAwareParity(ParityController(n), onset_prior=1e-4, spike_prior=2.0)
+    healthy = np.full(n, 1e-3)
+    for _ in range(dap.calm_patience + 1):
+        dap.observe(healthy)
+    assert dap.relax_worthwhile(budget)
+    assert dap.level(budget, 1e9) == 0
+    # violent environment: the same calm window does NOT relax
+    dap2 = DeadlineAwareParity(ParityController(n), onset_prior=0.05, spike_prior=50.0)
+    for _ in range(dap2.calm_patience + 1):
+        dap2.observe(healthy)
+    assert not dap2.relax_worthwhile(budget)
+    assert dap2.level(budget, 1e9) == budget
+
+
+# --------------------------------------------------------------------------
+# shard latency model
+# --------------------------------------------------------------------------
+def test_shard_latency_model_stationary_fraction():
+    inj = StragglerInjection(onset=0.002, slow_factor=10.0, persistence=100.0)
+    m = ShardLatencyModel(16, 0.5, inj, seed=0)
+    fracs = []
+    for _ in range(4000):
+        m.step()
+        fracs.append(m.slow.mean())
+    target = 0.002 * 100.0 / (1.0 + 0.002 * 100.0)
+    assert abs(np.mean(fracs[1000:]) - target) < 0.08
+
+
+# --------------------------------------------------------------------------
+# simulator
+# --------------------------------------------------------------------------
+def test_simulate_serve_deterministic():
+    trace = poisson_trace(0.25, 60, seed=7)
+    inj = StragglerInjection(onset=0.002, slow_factor=50.0, persistence=150.0)
+    a = simulate_serve(trace, "adaptive", injection=inj, seed=3)
+    b = simulate_serve(trace, "adaptive", injection=inj, seed=3)
+    assert np.array_equal(a.t_complete, b.t_complete)
+    assert np.array_equal(a.step_times, b.step_times)
+    assert a.topups == b.topups
+
+
+def test_simulate_serve_policy_ordering_under_stragglers():
+    """The bench's acceptance relations on one small cell: coded beats
+    uncoded on goodput, adaptive's attainment >= fixed's (mean over a few
+    injection seeds)."""
+    trace = poisson_trace(0.22, 80, seed=3)
+    inj = StragglerInjection(onset=0.002, slow_factor=50.0, persistence=150.0)
+    att = {p: [] for p in ("uncoded", "fixed", "adaptive")}
+    good = {p: [] for p in ("uncoded", "fixed", "adaptive")}
+    for s in range(3):
+        for p in att:
+            r = simulate_serve(trace, p, injection=inj, seed=20 + s)
+            att[p].append(r.attainment)
+            good[p].append(r.goodput)
+    assert np.mean(att["adaptive"]) >= np.mean(att["fixed"])
+    assert np.mean(good["fixed"]) > np.mean(good["uncoded"])
+    assert np.mean(good["adaptive"]) > np.mean(good["uncoded"])
+
+
+def test_simulate_serve_healthy_hedges_then_relaxes():
+    trace = poisson_trace(0.2, 40, seed=1)
+    r = simulate_serve(trace, "adaptive", injection=None, seed=0)
+    assert r.topups == 0
+    assert r.attainment == 1.0
+    # pessimistic priors hedge the full budget until the onset-rate
+    # estimate decays; a spike-free run must end relaxed (nothing dropped)
+    assert (r.parity_levels[:8] == 4).all()
+    assert (r.parity_levels[-20:] == 0).all()
+    relaxed = np.flatnonzero(r.parity_levels == 0)
+    assert len(relaxed) > 0 and (r.parity_levels[relaxed[0]:] == 0).all()
+    f = simulate_serve(trace, "fixed", injection=None, seed=0)
+    assert (f.parity_levels == 4).all()  # fixed always drops the budget
+
+
+def test_token_latency_percentiles_are_weighted():
+    trace = poisson_trace(0.2, 30, seed=2)
+    r = simulate_serve(trace, "fixed", injection=None, seed=0)
+    p50 = r.token_latency_percentile(50)
+    p99 = r.token_latency_percentile(99)
+    assert r.step_times.min() <= p50 <= p99 <= r.step_times.max()
+
+
+def test_golden_serve_trace_fixture():
+    """Pin one trace's per-request completion times (regenerate with
+    tests/fixtures/regen_golden_serve.py after an INTENTIONAL behaviour
+    change — the diff is the review artifact)."""
+    with open(FIXTURE) as f:
+        g = json.load(f)
+    trace = poisson_trace(
+        g["rate"],
+        g["n_requests"],
+        seed=g["trace_seed"],
+        mean_tokens=g["mean_tokens"],
+        max_tokens=g["max_tokens"],
+    )
+    inj = StragglerInjection(**g["injection"])
+    r = simulate_serve(trace, g["policy"], injection=inj, seed=g["inj_seed"])
+    got = np.where(np.isfinite(r.t_complete), r.t_complete, -1.0)
+    np.testing.assert_allclose(got, np.asarray(g["t_complete"]), rtol=0, atol=1e-9)
+    assert r.topups == g["topups"]
+    assert round(r.attainment, 9) == g["attainment"]

@@ -5,7 +5,7 @@ import pytest
 pytestmark = pytest.mark.slow  # Monte-Carlo sweeps: the CI slow job
 
 from repro.core.allocation import Allocation, allocate
-from repro.core.distributions import ShiftedExp, sample_heterogeneous_cluster
+from repro.core.distributions import sample_heterogeneous_cluster
 from repro.core.encoding import required_rows
 from repro.core.simulator import (
     DecodeCostModel,

@@ -33,8 +33,9 @@ import sys
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BASELINE_DIR = os.path.join(REPO, "reports", "bench")
-BLOCKS = "kernels,decode,streaming,adaptive"
-FILES = ["kernels", "BENCH_decode", "BENCH_streaming", "BENCH_adaptive"]
+BLOCKS = "kernels,decode,streaming,adaptive,serve"
+FILES = ["kernels", "BENCH_decode", "BENCH_streaming", "BENCH_adaptive",
+         "BENCH_serve"]
 ADAPTIVE_QUICK_SPEEDUP = 2.5   # matches benchmarks/adaptive_bench.py
 DECODE_MIN_ADVANTAGE = 1.0     # cached decode at least matches the SVD path
 STREAMING_MIN_ADVANTAGE = 1.0  # residual decode at least matches terminal
@@ -107,6 +108,30 @@ def check_adaptive(fresh: list[dict]) -> None:
                  f"churn={r.get('churn_rate')})")
 
 
+def check_serve(fresh: list[dict]) -> None:
+    """The serve bench's acceptance relations, re-checked on the fresh run:
+    adaptive SLO attainment >= fixed per cell, and coded goodput above
+    uncoded in every straggler-injection cell (scale-free — quick mode
+    shrinks the trace, not the relations)."""
+    cells: dict[tuple, dict] = {}
+    for r in fresh:
+        cells.setdefault((r["trace"], r["onset"], r["slow_factor"]), {})[
+            r["policy"]
+        ] = r
+    for key, pols in cells.items():
+        if not {"uncoded", "fixed", "adaptive"} <= set(pols):
+            fail(f"serve: cell {key} missing a policy arm (have {sorted(pols)})")
+            continue
+        if pols["adaptive"]["attainment"] < pols["fixed"]["attainment"]:
+            fail(f"serve: adaptive attainment below fixed in {key} "
+                 f"({pols['adaptive']['attainment']:.3f} < "
+                 f"{pols['fixed']['attainment']:.3f})")
+        if key[1] > 0:
+            for coded in ("fixed", "adaptive"):
+                if pols[coded]["goodput"] <= pols["uncoded"]["goodput"]:
+                    fail(f"serve: {coded} goodput not above uncoded in {key}")
+
+
 def check_kernels(fresh: list[dict]) -> None:
     seen: dict[tuple, set] = {}
     for r in fresh:
@@ -173,6 +198,8 @@ def main() -> int:
         check_streaming(fresh_by_name["BENCH_streaming"])
     if fresh_by_name.get("BENCH_adaptive"):
         check_adaptive(fresh_by_name["BENCH_adaptive"])
+    if fresh_by_name.get("BENCH_serve"):
+        check_serve(fresh_by_name["BENCH_serve"])
     if fresh_by_name.get("kernels"):
         check_kernels(fresh_by_name["kernels"])
         if not _failures:

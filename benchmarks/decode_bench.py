@@ -3,9 +3,12 @@
 Tracks the two hot paths this repo's latency story stands on:
 
   * masked ``CodedLinear.apply`` (the serving decode step): mask-keyed
-    DecoderCache vs the seed's in-graph SVD pseudo-inverse, plus the fused
-    Pallas matmul+decode kernel (interpret mode on CPU — dataflow cost, not
-    TPU wall-clock);
+    DecoderCache vs the seed's in-graph SVD pseudo-inverse vs the
+    autotuned ``kernel_mode="auto"`` dispatch (DESIGN.md §11) — all timed
+    INTERLEAVED, and the bench HARD-FAILS if auto loses to the SVD seed at
+    any shape; plus the fused Pallas matmul+decode kernel rows tagged by
+    execution mode (interpret rows are interpreter overhead, excluded from
+    assertions and autotune candidacy);
   * the paper's Monte-Carlo sweep: vectorized ``simulate_scheme`` vs the
     seed-equivalent scalar loop (per-trial ``sample_rates`` +
     ``completion_time``, allocation re-solved per scheme as the seed did).
@@ -31,6 +34,7 @@ from repro.core.distributions import sample_heterogeneous_cluster
 from repro.core.encoding import required_rows
 from repro.core.simulator import completion_time, sample_rates, simulate_scheme
 from repro.kernels import coded_matvec_decode
+from repro.kernels.dispatch import choose_coded_linear
 from repro.utils.prng import derive
 
 SCHEMES = ["uniform", "load_balanced", "hcmm", "bpcc"]
@@ -44,6 +48,23 @@ def _time_us(fn, reps: int = 15) -> float:
         jax.block_until_ready(fn())
         ts.append(time.perf_counter() - t0)
     return float(np.median(ts) * 1e6)
+
+
+def _time_group_us(fns: dict, reps: int = 25) -> dict:
+    """INTERLEAVED A/B timing: every rep cycles through all candidates
+    once (round-robin), median per candidate.  Sequential per-candidate
+    loops drift with host load — that drift manufactured the seed table's
+    spurious 0.98x cached-vs-SVD 'regression' at 1024x256x8.  Ratios
+    asserted between candidates must come from one interleaved group."""
+    for fn in fns.values():
+        jax.block_until_ready(fn())  # compile outside the timed region
+    samples: dict = {k: [] for k in fns}
+    for _ in range(reps):
+        for name, fn in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            samples[name].append(time.perf_counter() - t0)
+    return {k: float(np.median(v) * 1e6) for k, v in samples.items()}
 
 
 def _random_masks(rng, n: int, n_blocks: int, n_parity: int) -> jnp.ndarray:
@@ -82,15 +103,21 @@ def bench_decode_path(quick: bool = False) -> list[dict]:
         masks = _random_masks(rng, n_masks, nb, n_parity)
         f_new = jax.jit(jax.vmap(lambda y_, m_: decode_blocks(y_, m_, n_data, n_parity)))
         f_old = jax.jit(jax.vmap(lambda y_, m_: decode_blocks_svd(y_, m_, n_data, n_parity)))
-        us_cached = _time_us(lambda: f_new(y, masks)) / n_masks
-        us_svd = _time_us(lambda: f_old(y, masks)) / n_masks
+        us = _time_group_us({
+            "cached": lambda: f_new(y, masks),
+            "svd": lambda: f_old(y, masks),
+        }, reps=15)
         rows.append({
             "bench": "masked_decode_per_step", "shape": f"{nb}x{br}x{b}",
-            "n_masks": n_masks, "us_cached": us_cached, "us_svd_seed": us_svd,
-            "svd_over_cached": us_svd / us_cached,
+            "n_masks": n_masks, "us_cached": us["cached"] / n_masks,
+            "us_svd_seed": us["svd"] / n_masks,
+            "svd_over_cached": us["svd"] / us["cached"],
         })
 
-    shapes = [(1024, 256, 8)] if quick else [(4096, 1024, 8), (1024, 256, 8)]
+    shapes = (
+        [(1024, 256, 8)] if quick
+        else [(4096, 1024, 8), (1024, 256, 8), (256, 512, 4)]
+    )
     for out, inner, b in shapes:
         cl = CodedLinear(n_data=n_data, n_parity=n_parity, out_features=out)
         w = rng.standard_normal((out, inner)).astype(np.float32)
@@ -108,24 +135,58 @@ def bench_decode_path(quick: bool = False) -> list[dict]:
             return y.reshape(cl.n_data * cl.block_rows, -1)[: cl.out_features]
 
         svd = jax.jit(svd_apply)
-        us_cached = _time_us(lambda: cached(wc, x, m))
-        us_svd = _time_us(lambda: svd(wc, x, m))
+        auto = jax.jit(
+            lambda wc_, x_, m_, cl=cl: cl.apply(wc_, x_, m_, kernel_mode="auto")
+        )
+        decision = choose_coded_linear(out, inner, b, n_data, n_parity)
+        us = _time_group_us({
+            "cached": lambda: cached(wc, x, m),
+            "svd": lambda: svd(wc, x, m),
+            "auto": lambda: auto(wc, x, m),
+        })
         rows.append({
             "bench": "coded_linear_apply", "shape": f"{out}x{inner}x{b}",
-            "us_cached": us_cached, "us_svd_seed": us_svd,
-            "svd_over_cached": us_svd / us_cached,
+            "us_cached": us["cached"], "us_svd_seed": us["svd"],
+            "svd_over_cached": us["svd"] / us["cached"],
+            "us_auto": us["auto"], "auto_impl": decision.impl,
+            "auto_mode": decision.mode, "auto_source": decision.source,
+            "svd_over_auto": us["svd"] / us["auto"],
         })
 
         rec = get_decoder_cache(cl.n_data, cl.n_parity).recovery(m)
-        for mode in ["interpret", "off"]:
+        fused = {
+            mode: jax.jit(
+                lambda wc_, x_, r_, mode=mode: coded_matvec_decode(
+                    wc_, x_, r_, mode=mode
+                )
+            )
+            for mode in ["interpret", "off"]
+        }
+        for mode, f in fused.items():
+            # interpret rows are interpreter overhead, not kernel
+            # performance: tagged by mode, excluded from every speedup
+            # assertion and from autotune-table candidacy (DESIGN.md §11)
             rows.append({
                 "bench": "fused_matvec_decode", "shape": f"{out}x{inner}x{b}",
                 "mode": mode,
                 "us": _time_us(
-                    lambda mode=mode: coded_matvec_decode(wc, x, rec, mode=mode),
+                    lambda f=f: f(wc, x, rec),
                     reps=5 if mode == "interpret" else 15,
                 ),
             })
+
+    # the autotune acceptance gate (ISSUE 6): the auto-dispatched path may
+    # not lose to the SVD seed fallback at ANY benched shape — the whole
+    # point of the dispatch table is that no cell is slower than the
+    # fallback it exists to beat
+    for r in rows:
+        if r["bench"] == "coded_linear_apply" and r["svd_over_auto"] < 1.0:
+            raise RuntimeError(
+                f"auto-dispatched coded_linear_apply slower than the SVD "
+                f"seed at {r['shape']}: svd_over_auto={r['svd_over_auto']:.3f} "
+                f"(auto={r['auto_impl']}/{r['auto_mode']} from "
+                f"{r['auto_source']})"
+            )
     return rows
 
 

@@ -23,7 +23,7 @@ BLOCKS = {
     "streaming": ("streaming_bench", "BENCH_streaming.json (residual vs terminal decode)"),
     "adaptive": ("adaptive_bench", "BENCH_adaptive.json (static vs adaptive under drift/churn)"),
     "serve": ("serve_bench", "BENCH_serve.json (trace-driven serving: SLO attainment/goodput under stragglers)"),
-    "roofline": ("roofline_bench", "(stdout only: roofline summaries)"),
+    "roofline": ("roofline_bench", "roofline.json (per-cell roofline terms; self-generates its dryrun input)"),
 }
 
 

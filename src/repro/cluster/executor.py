@@ -195,9 +195,11 @@ class ClusterEmulator:
         (``repro.kernels.ops.encode_rows``): 'interpret' | 'compile' | 'off'
         as in kernels.ops, DESIGN.md §9 — mid-task top-ups sit on the
         control loop's critical path, so unlike the offline pre-stored
-        encode they must not round-trip through the host.  None (default)
-        keeps the whole encode on the host path (bit-identical to previous
-        behaviour)."""
+        encode they must not round-trip through the host.  'auto' picks the
+        encode implementation per (shape, backend) from the autotune
+        dispatch table with analytical-model fallback (DESIGN.md §11).
+        None (default) keeps the whole encode on the host path
+        (bit-identical to previous behaviour)."""
         r, m = a.shape
         if x.shape[0] != m:
             raise ValueError(f"x has {x.shape[0]} entries, A has {m} columns")

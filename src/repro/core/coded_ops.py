@@ -257,25 +257,49 @@ class CodedLinear:
         """x [in, batch] -> y [out, batch]; w_coded [n_blocks*br, in].
 
         Default: XLA block matmul + mask-keyed cached decode (DESIGN.md §2).
-        ``kernel_mode`` routes through the fused Pallas matmul+decode kernel
-        (``'interpret'``/``'compile'``/``'off'``, see ``repro.kernels.ops``)
-        which applies the recovery matrix to block outputs while they are
-        VMEM-resident — one HBM write total (DESIGN.md §6).  Geometries the
-        DecoderCache refuses ignore ``kernel_mode`` and take the default
-        path's SVD fallback (the fused kernel needs the cached recovery).
+        ``kernel_mode`` selects the implementation:
+
+          * ``None`` — the default cached path;
+          * ``'interpret'``/``'compile'``/``'off'`` — the fused matmul+decode
+            dataflow (``repro.kernels.ops.coded_matvec_decode``), which
+            applies the recovery matrix to block outputs while they are
+            VMEM-resident — one HBM write total (DESIGN.md §6);
+          * ``'svd'`` — force the seed's in-graph SVD fallback (the A/B
+            baseline the autotuner and decode bench measure against);
+          * ``'auto'`` — per-shape dispatch via the autotune table with
+            analytical-model fallback (``repro.kernels.dispatch``,
+            DESIGN.md §11), resolved at trace time from static shapes.
+
+        Geometries the DecoderCache refuses cannot run the fused kernel (it
+        needs the cached recovery matrix): they take the default path, whose
+        ``decode_blocks`` falls back to SVD internally.
         """
-        if kernel_mode is not None:
+        params: dict = {}
+        if kernel_mode == "auto":
+            from repro.kernels.dispatch import choose_coded_linear
+
+            d = choose_coded_linear(
+                self.out_features, w_coded.shape[1],
+                x.shape[1] if x.ndim == 2 else 1,
+                self.n_data, self.n_parity,
+            )
+            kernel_mode, params = d.kernel_mode, dict(d.params)
+        if kernel_mode is not None and kernel_mode != "svd":
             from repro.core.decoding import cacheable, get_decoder_cache
 
             if cacheable(self.n_data, self.n_parity):
                 from repro.kernels.ops import coded_matvec_decode
 
                 rec = get_decoder_cache(self.n_data, self.n_parity).recovery(mask)
-                y = coded_matvec_decode(w_coded, x, rec, mode=kernel_mode)
+                y = coded_matvec_decode(w_coded, x, rec, mode=kernel_mode,
+                                        **params)
                 return y[: self.out_features]
         y_coded = w_coded @ x  # rows sharded -> each device computes its block
         y_coded = y_coded.reshape(self.n_blocks, self.block_rows, -1)
-        y = decode_blocks(y_coded, mask, self.n_data, self.n_parity)
+        if kernel_mode == "svd":
+            y = decode_blocks_svd(y_coded, mask, self.n_data, self.n_parity)
+        else:
+            y = decode_blocks(y_coded, mask, self.n_data, self.n_parity)
         y = y.reshape(self.n_data * self.block_rows, -1)
         return y[: self.out_features]
 
@@ -301,15 +325,26 @@ def coded_block_matmul(
     None keeps the plain XLA matmul — which is also the bit-identity
     contract with the single-device CodedLinear path (same per-row dot
     products, same decode_blocks arithmetic on the gathered outputs).
+    ``'auto'`` resolves per LOCAL shard shape at trace time
+    (``repro.kernels.dispatch``); when the dispatcher picks the jnp
+    reference it degrades to the plain matmul, preserving the bit-identity
+    contract on backends where the Pallas kernel has no edge.
     """
     n_blocks = n_data + n_parity
     br = w_coded.shape[0] // n_blocks
 
     def local(wc, xc, m):
-        if kernel_mode is not None:
+        mode, params = kernel_mode, {}
+        if mode == "auto":
+            from repro.kernels.dispatch import choose_matvec
+
+            d = choose_matvec(wc.shape[0], wc.shape[1],
+                              xc.shape[1] if xc.ndim == 2 else 1)
+            mode, params = (None if d.impl == "ref" else d.mode), dict(d.params)
+        if mode is not None:
             from repro.kernels.ops import coded_matvec
 
-            y_local = coded_matvec(wc, xc, mode=kernel_mode)
+            y_local = coded_matvec(wc, xc, mode=mode, **params)
         else:
             y_local = wc @ xc                   # [br_local, batch]
         y_all = jax.lax.all_gather(y_local, axis, axis=0, tiled=True)

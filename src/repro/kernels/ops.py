@@ -4,6 +4,13 @@
 the Pallas interpreter — bit-faithful to the TPU kernel dataflow, executable
 on CPU.  On real TPU pass ``use_pallas='compile'``.  ``'off'`` routes to the
 pure-jnp reference (the oracle itself), useful for A/B in benchmarks.
+
+``'auto'`` consults the dispatch table / analytical cost model
+(``repro.kernels.dispatch``, DESIGN.md §11): the implementation AND its
+tile parameters are resolved per (op, shape, dtype, backend) at trace time
+— shapes under jit are static, so the resolved kernel is baked into the
+compiled program.  Explicitly-passed modes are never overridden, and
+explicit tile kwargs win over table parameters.
 """
 from __future__ import annotations
 
@@ -18,7 +25,12 @@ from repro.kernels.coded_matvec import coded_matvec_pallas
 from repro.kernels.lt_encode import gaussian_encode_pallas, lt_encode_pallas
 from repro.kernels.ssd_scan import ssd_chunk_pallas, ssd_combine_pallas
 
-Mode = Literal["interpret", "compile", "off"]
+Mode = Literal["interpret", "compile", "off", "auto"]
+
+
+def _auto(decision, kw: dict) -> tuple[str, dict]:
+    """(mode, kwargs) from a dispatch Decision; caller kwargs win."""
+    return decision.mode or "off", {**decision.params, **kw}
 
 __all__ = [
     "coded_matvec",
@@ -33,6 +45,11 @@ __all__ = [
 
 
 def coded_matvec(a, x, mode: Mode = "interpret", **kw):
+    if mode == "auto":
+        from repro.kernels.dispatch import choose_matvec
+
+        b = x.shape[1] if x.ndim == 2 else 1
+        mode, kw = _auto(choose_matvec(a.shape[0], a.shape[1], b), kw)
     if mode == "off":
         return _ref.ref_coded_matvec(a, x)
     return coded_matvec_pallas(a, x, interpret=(mode == "interpret"), **kw)
@@ -44,6 +61,15 @@ def coded_matvec_decode(a, x, rec, mode: Mode = "interpret", **kw):
     ``rec`` is the mask-keyed [n_data, n_blocks] recovery matrix from
     ``repro.core.decoding.DecoderCache.recovery(mask)``.
     """
+    if mode == "auto":
+        from repro.kernels.dispatch import choose_matvec_decode
+
+        b = x.shape[1] if x.ndim == 2 else 1
+        mode, kw = _auto(
+            choose_matvec_decode(a.shape[0], a.shape[1], b,
+                                 rec.shape[0], rec.shape[1]),
+            kw,
+        )
     if mode == "off":
         return _ref.ref_coded_matvec_decode(a, x, rec)
     return coded_matvec_decode_pallas(a, x, rec, interpret=(mode == "interpret"), **kw)
@@ -75,7 +101,9 @@ def coded_head_matvec(
 
     Both paths share ``decode_blocks`` and the same generator, so the
     sharded head is bit-identical to the single-device head on identical
-    masks (asserted in tests/test_serve_mesh.py).
+    masks (asserted in tests/test_serve_mesh.py).  ``kernel_mode='auto'``
+    resolves the implementation per shape from the autotune dispatch table
+    (``repro.kernels.dispatch``, DESIGN.md §11).
     """
     from repro.core.coded_ops import CodedLinear, coded_block_matmul
 
@@ -90,6 +118,14 @@ def coded_head_matvec(
 
 
 def lt_encode(a, indices, coeffs, mode: Mode = "interpret", **kw):
+    if mode == "auto":
+        from repro.kernels.dispatch import choose_encode
+
+        mode, kw = _auto(
+            choose_encode("lt", indices.shape[0], a.shape[0], a.shape[1],
+                          d_max=indices.shape[1]),
+            kw,
+        )
     if mode == "off":
         return _ref.ref_lt_encode(a, indices, coeffs)
     return lt_encode_pallas(a, indices, coeffs, interpret=(mode == "interpret"), **kw)
@@ -97,6 +133,12 @@ def lt_encode(a, indices, coeffs, mode: Mode = "interpret", **kw):
 
 def gaussian_encode(g, a, mode: Mode = "interpret", **kw):
     """Â = G A for a dense generator slice (tiled MXU matmul, DESIGN.md §9)."""
+    if mode == "auto":
+        from repro.kernels.dispatch import choose_encode
+
+        mode, kw = _auto(
+            choose_encode("gaussian", g.shape[0], g.shape[1], a.shape[1]), kw
+        )
     if mode == "off":
         return _ref.ref_gaussian_encode(g, a)
     return gaussian_encode_pallas(g, a, interpret=(mode == "interpret"), **kw)

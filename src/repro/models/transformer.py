@@ -478,11 +478,17 @@ def _last_logits(
     Inside a ``sharding.ctx.coded_head_mesh`` context the same matvec runs
     shard_map'd over a real mesh — one code block per device, erasure =
     dropping a device's output — via ``kernels.ops.coded_head_matvec``
-    (bit-identical to the single-program path on identical masks)."""
+    (bit-identical to the single-program path on identical masks).  A
+    ``sharding.ctx.head_kernel_mode`` context picks the head's kernel
+    implementation — ``'auto'`` for the autotuned per-shape dispatch
+    (DESIGN.md §11), resolved here at trace time from the static shapes."""
     last = hidden[:, -1]
     if cfg is not None and cfg.coded and "lm_head_coded" in params:
         from repro.kernels.ops import coded_head_matvec
-        from repro.sharding.ctx import current_coded_head_mesh
+        from repro.sharding.ctx import (
+            current_coded_head_mesh,
+            current_head_kernel_mode,
+        )
 
         n_blocks = _coded_blocks(cfg)
         mask = head_mask if head_mask is not None else jnp.ones((n_blocks,), jnp.float32)
@@ -496,6 +502,7 @@ def _last_logits(
             cfg.coded_parity,
             mesh=mesh,
             axis=axis,
+            kernel_mode=current_head_kernel_mode(),
         )
         return y[: cfg.vocab].T
     head = params["lm_head"] if "lm_head" in params else params["embed"].T

@@ -100,6 +100,7 @@ class ServeEngine:
         encode_mode: str = "interpret",
         mesh=None,
         head_axis: str = "model",
+        head_kernel_mode: str | None = None,
         scheduler: "TraceScheduler | None" = None,
         parity_policy: "DeadlineAwareParity | None" = None,
         clock: Callable[[], float] | None = None,
@@ -123,7 +124,14 @@ class ServeEngine:
         objects.  ``parity_policy`` replaces the raw ParityController level
         with the deadline-aware rule (SLO slack from the scheduler);
         ``clock`` supplies "now" (defaults to ``time.monotonic``; tests
-        inject a fake model-time clock)."""
+        inject a fake model-time clock).
+
+        ``head_kernel_mode`` selects the coded head's kernel
+        implementation: ``'auto'`` consults the autotune dispatch table
+        (analytical-model fallback for unseen shapes, DESIGN.md §11), an
+        explicit mode pins one, None keeps the default cached path.  It is
+        installed as a ``sharding.ctx.head_kernel_mode`` context inside the
+        jitted step traces — same threading pattern as the head mesh."""
         self.model, self.params = model, params
         self.n_slots, self.s_max = n_slots, s_max
         self.mask_fn = mask_fn
@@ -147,6 +155,7 @@ class ServeEngine:
         self.parity_topup = parity_topup
         self.topup_patience = topup_patience
         self.encode_mode = encode_mode
+        self.head_kernel_mode = head_kernel_mode
         self.parity_events: list[dict] = []
         self._saturated_steps = 0
         self._steps = 0
@@ -183,19 +192,20 @@ class ServeEngine:
     def _bind_model(self, model: Model) -> None:
         """(Re-)jit the decode/prefill steps for the given model config —
         called at init and after a parity-budget top-up re-encode."""
-        from repro.sharding.ctx import coded_head_mesh
+        from repro.sharding.ctx import coded_head_mesh, head_kernel_mode
 
         self.model = model
         s_max = self.s_max
         mesh, axis = self._mesh, self._head_axis
+        kmode = self.head_kernel_mode
 
         def _decode_argmax(params, cache, last_tok, mask):
-            with coded_head_mesh(mesh, axis):
+            with coded_head_mesh(mesh, axis), head_kernel_mode(kmode):
                 logits, cache = model.decode_step(params, cache, last_tok, mask)
             return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
 
         def _prefill_argmax(params, batch):
-            with coded_head_mesh(mesh, axis):
+            with coded_head_mesh(mesh, axis), head_kernel_mode(kmode):
                 logits, cache1 = model.prefill(params, batch, s_max=s_max)
             return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache1
 

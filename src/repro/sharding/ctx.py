@@ -20,6 +20,12 @@ _HINTS: ContextVar[dict | None] = ContextVar("sharding_hints", default=None)
 # mesh-agnostic either way.
 _CODED_HEAD: ContextVar[tuple | None] = ContextVar("coded_head_mesh", default=None)
 
+# kernel mode for the coded LM-head matvec — same threading pattern as the
+# mesh: the engine installs it around its jitted step traces, the model
+# reads it at trace time (DESIGN.md §11).  'auto' turns on table-driven
+# dispatch; None keeps the default cached path.
+_HEAD_KMODE: ContextVar[str | None] = ContextVar("head_kernel_mode", default=None)
+
 
 def current_hints() -> dict | None:
     return _HINTS.get()
@@ -53,6 +59,27 @@ def coded_head_mesh(mesh, axis: str = "model"):
         yield
     finally:
         _CODED_HEAD.reset(token)
+
+
+def current_head_kernel_mode() -> str | None:
+    """Kernel mode for the coded LM-head matvec, or None (default path)."""
+    return _HEAD_KMODE.get()
+
+
+@contextlib.contextmanager
+def head_kernel_mode(mode: str | None):
+    """Route the coded LM-head matvec through ``kernel_mode=mode`` —
+    ``'auto'`` for autotuned per-shape dispatch (DESIGN.md §11), an explicit
+    kernel mode to pin an implementation.  None is a no-op, so callers can
+    thread an optional mode straight in."""
+    if mode is None:
+        yield
+        return
+    token = _HEAD_KMODE.set(mode)
+    try:
+        yield
+    finally:
+        _HEAD_KMODE.reset(token)
 
 
 def shard_hint(x: jax.Array, name: str) -> jax.Array:

@@ -19,7 +19,17 @@ in place), then diffs the fresh artifacts against the committed baselines:
       - kernels:    every (kernel, shape) has both interpret + off rows;
   * upload: the fresh encode-kernel rows (``gaussian_encode``) are merged
     into the committed ``reports/bench/kernels.json`` so the new kernel's
-    numbers ride along without hand-editing (other rows untouched).
+    numbers ride along without hand-editing (other rows untouched);
+  * autotune: the committed dispatch table (``reports/bench/autotune.json``,
+    DESIGN.md §11) is checked statically — no interpret-mode winners (an
+    interpret-built table would dispatch production traffic to the Pallas
+    interpreter), measured winners within ``MODEL_ERROR_BOUND`` of the cost
+    model — and, when a fresh quick re-measure exists in the scratch dir,
+    for CONSISTENCY: each committed winner must be within ``AUTOTUNE_TOL``
+    of the freshly measured best at the same cell (near-tie flips are fine;
+    a committed winner that is now 2x off is a stale table).
+    ``--autotune-only`` runs just that re-measure + check (the CI
+    autotune-consistency job).
 
 Exit code 0 = baselines healthy; 1 = a check failed (printed).
 """
@@ -32,6 +42,10 @@ import subprocess
 import sys
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.kernels.cost import MODEL_ERROR_BOUND  # noqa: E402
+
 BASELINE_DIR = os.path.join(REPO, "reports", "bench")
 BLOCKS = "kernels,decode,streaming,adaptive,serve"
 FILES = ["kernels", "BENCH_decode", "BENCH_streaming", "BENCH_adaptive",
@@ -39,6 +53,10 @@ FILES = ["kernels", "BENCH_decode", "BENCH_streaming", "BENCH_adaptive",
 ADAPTIVE_QUICK_SPEEDUP = 2.5   # matches benchmarks/adaptive_bench.py
 DECODE_MIN_ADVANTAGE = 1.0     # cached decode at least matches the SVD path
 STREAMING_MIN_ADVANTAGE = 1.0  # residual decode at least matches terminal
+AUTOTUNE_TOL = 2.0  # committed winner vs fresh best: default/fused are
+#                     genuine near-ties on CPU (flip run-to-run within
+#                     +-10%); 2x catches a stale or wrong-host table
+#                     without tripping on tie flips
 
 _failures: list[str] = []
 
@@ -75,10 +93,18 @@ def check_schema(name: str, baseline: list[dict], fresh: list[dict]) -> None:
 
 def check_decode(fresh: list[dict]) -> None:
     for r in fresh:
+        if r.get("mode") == "interpret":
+            continue  # interpreter overhead, not kernel performance
         adv = r.get("svd_over_cached")
         if adv is not None and adv < DECODE_MIN_ADVANTAGE:
             fail(f"decode: cached path lost its advantage in {r.get('bench')} "
                  f"{r.get('shape')} (svd_over_cached={adv:.2f})")
+        adv = r.get("svd_over_auto")
+        if adv is not None and adv < DECODE_MIN_ADVANTAGE:
+            fail(f"decode: auto dispatch lost to the SVD seed in "
+                 f"{r.get('bench')} {r.get('shape')} (svd_over_auto={adv:.2f}, "
+                 f"auto={r.get('auto_impl')}/{r.get('auto_mode')} from "
+                 f"{r.get('auto_source')})")
 
 
 def check_streaming(fresh: list[dict]) -> None:
@@ -143,6 +169,55 @@ def check_kernels(fresh: list[dict]) -> None:
         fail("kernels: encode kernel (gaussian_encode) rows missing")
 
 
+def check_autotune(committed: dict, fresh: dict | None) -> None:
+    """Static health of the committed dispatch table, plus (when a fresh
+    quick re-measure is available) committed-vs-fresh consistency."""
+    entries = committed.get("entries", [])
+    if not entries:
+        fail("autotune: committed table has no entries")
+        return
+    for e in entries:
+        where = f"{e['op']} {e['shape']} [{e['backend']}]"
+        if e.get("mode") == "interpret":
+            fail(f"autotune: committed winner is interpret-mode at {where} — "
+                 f"the table was built in an interpreter environment")
+        err = e.get("model_error")
+        if e.get("source") == "measured" and err is not None \
+                and err > MODEL_ERROR_BOUND:
+            fail(f"autotune: winner at {where} is {err:.2f}x off the cost "
+                 f"model (> {MODEL_ERROR_BOUND}x) — roofline constants or "
+                 f"the measurement are wrong")
+    if fresh is None:
+        return
+    by_key = {(e["op"], e["backend"], e["shape"]): e for e in entries}
+    for fe in fresh.get("entries", []):
+        if fe.get("source") != "measured":
+            continue
+        key = (fe["op"], fe["backend"], fe["shape"])
+        ce = by_key.get(key)
+        if ce is None:
+            fail(f"autotune: committed table has no entry for re-measured "
+                 f"cell {key} — regenerate with tools/autotune.py")
+            continue
+        live = [c for c in fe.get("candidates", []) if not c.get("excluded")]
+        if not live:
+            continue
+        best_us = min(c["us"] for c in live)
+        mine = [c for c in live if c["impl"] == ce["impl"]]
+        if not mine:
+            fail(f"autotune: committed winner {ce['impl']} at {key} was not "
+                 f"among the fresh candidates")
+            continue
+        ratio = mine[0]["us"] / best_us
+        if ratio > AUTOTUNE_TOL:
+            fail(f"autotune: committed winner {ce['impl']} at {key} is "
+                 f"{ratio:.2f}x slower than the fresh best (> {AUTOTUNE_TOL}x"
+                 f") — the table is stale for this host")
+        else:
+            print(f"autotune ok: {key} committed={ce['impl']} "
+                  f"fresh-best-ratio={ratio:.2f}x")
+
+
 def upload_encode_rows(fresh: list[dict]) -> None:
     """Merge the fresh encode-kernel rows into the committed kernels.json —
     keyed by (kernel, mode, shape), so a rerun refreshes ITS OWN shapes in
@@ -169,16 +244,36 @@ def main() -> int:
                     help="scratch dir the quick run writes to (never reports/bench)")
     ap.add_argument("--skip-run", action="store_true",
                     help="diff existing scratch artifacts without rerunning")
+    ap.add_argument("--autotune-only", action="store_true",
+                    help="re-measure the quick autotune grid into the scratch "
+                         "dir and run only the autotune consistency checks "
+                         "(the CI autotune job)")
     args = ap.parse_args()
     scratch = os.path.abspath(args.scratch)
     if os.path.realpath(scratch) == os.path.realpath(BASELINE_DIR):
         print("refusing to use the committed baseline dir as scratch")
         return 1
+    env = dict(os.environ, BENCH_REPORT_DIR=scratch)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in [os.path.join(REPO, "src"), env.get("PYTHONPATH")] if p
+    )
+    if args.autotune_only:
+        if not args.skip_run:
+            cmd = [sys.executable, "tools/autotune.py", "--quick"]
+            print("+", " ".join(cmd), f"(BENCH_REPORT_DIR={scratch})")
+            proc = subprocess.run(cmd, cwd=REPO, env=env)
+            if proc.returncode != 0:
+                fail(f"quick autotune run exited {proc.returncode}")
+        committed = load(BASELINE_DIR, "autotune")
+        fresh = load(scratch, "autotune")
+        if committed is not None:
+            check_autotune(committed, fresh)
+        if _failures:
+            print(f"\n{len(_failures)} autotune check(s) failed")
+            return 1
+        print("\nautotune consistency checks passed")
+        return 0
     if not args.skip_run:
-        env = dict(os.environ, BENCH_REPORT_DIR=scratch)
-        env["PYTHONPATH"] = os.pathsep.join(
-            p for p in [os.path.join(REPO, "src"), env.get("PYTHONPATH")] if p
-        )
         cmd = [sys.executable, "-m", "benchmarks.run", "--quick", "--only", BLOCKS]
         print("+", " ".join(cmd), f"(BENCH_REPORT_DIR={scratch})")
         proc = subprocess.run(cmd, cwd=REPO, env=env)
@@ -204,6 +299,15 @@ def main() -> int:
         check_kernels(fresh_by_name["kernels"])
         if not _failures:
             upload_encode_rows(fresh_by_name["kernels"])
+    committed_tab = load(BASELINE_DIR, "autotune")
+    if committed_tab is not None:
+        # fresh re-measure only if one already exists in the scratch dir
+        # (the quick bench blocks don't produce one; the autotune CI job
+        # and --autotune-only do)
+        fresh_tab_path = os.path.join(scratch, "autotune.json")
+        fresh_tab = load(scratch, "autotune") \
+            if os.path.exists(fresh_tab_path) else None
+        check_autotune(committed_tab, fresh_tab)
 
     if _failures:
         print(f"\n{len(_failures)} baseline check(s) failed")

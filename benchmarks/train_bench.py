@@ -1,0 +1,217 @@
+"""Coded data-parallel training under Markov stragglers -> BENCH_train.json.
+
+The training analogue of the serve bench (DESIGN.md §12): per-step worker
+compute-time multipliers from the same two-state Markov injection
+(``cluster.straggler.MarkovStragglerPolicy``), driven through the coded
+training step-time model for three policies:
+
+  uncoded — s=0: every step waits for the SLOWEST of the m workers;
+  coded   — online replication: ``core.adaptive.ReplicationController``
+            re-chooses s per step from its latency posterior; each worker
+            does (s+1)x the work and the step completes at the (m-s)-th
+            fastest message (cyclic-code geometry, exact decode);
+  oracle  — same cost model with the TRUE multipliers (known-rates bound):
+            pointwise no slower than either arm by construction.
+
+Reported per injection cell, aggregated over ``n_seeds`` independent
+realizations: tokens/sec (model-time), p50/p99/mean step time, mean chosen
+replication level.  Alongside, *fidelity* rows re-run the REAL jit'd train
+step (tiny model, CPU) and assert the algebra the model-time arms rely on:
+coded == plain under an all-ones mask, exact recovery under every <= s
+mask, the unrecoverable-mask skip (params untouched), and convergence with
+error-feedback int8 message compression.
+
+Acceptance anchors (ISSUE 7), re-checked by bench_compare.check_train:
+  * coded tokens/sec > uncoded in EVERY straggler-injection cell;
+  * coded p99 step time below uncoded at the violent cells (slow >= 10);
+  * the oracle bounds both arms on tokens/sec and p99;
+  * every fidelity row passes.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.cluster.straggler import MarkovStragglerPolicy
+from repro.core.adaptive import ReplicationController
+
+# (onset, slow_factor): healthy, the paper's 3x straggler regime (§5.3.1,
+# stationary slow fraction ~0.23 at persistence 150), a 10x tier, and a
+# violent 50x tier matching the serve bench's heavy cells
+CELLS = [(0.0, 1.0), (0.002, 3.0), (0.002, 10.0), (0.004, 50.0)]
+PERSISTENCE = 150.0
+M = 8                    # coded workers (= microbatches)
+LEVELS = list(range(M))  # replication levels the controller may pick
+TOKENS_PER_STEP = 4096
+SEED0 = 17
+POLICIES = ["uncoded", "coded", "oracle"]
+
+
+def _step_times(mults: np.ndarray, policy: str) -> tuple[np.ndarray, np.ndarray]:
+    """Realized per-step times + chosen s for one policy over [T, m] mults."""
+    t_steps, m = mults.shape
+    srt = np.sort(mults, axis=1)
+    if policy == "uncoded":
+        return srt[:, -1], np.zeros(t_steps)
+    costs = np.stack([(s + 1) * srt[:, m - s - 1] for s in LEVELS], axis=1)
+    if policy == "oracle":
+        s_hist = costs.argmin(axis=1)
+        return costs[np.arange(t_steps), s_hist], s_hist.astype(float)
+    rc = ReplicationController(m)
+    times = np.empty(t_steps)
+    s_hist = np.empty(t_steps)
+    for t in range(t_steps):
+        s = rc.replication(LEVELS)
+        s_hist[t] = s
+        times[t] = costs[t, s]
+        rc.observe(mults[t])
+    return times, s_hist
+
+
+def _cell(onset: float, slow: float, policy: str, steps: int, n_seeds: int) -> dict:
+    pol = MarkovStragglerPolicy(
+        onset=onset, slow_factor=max(slow, 1.0), persistence=PERSISTENCE
+    )
+    times_all, s_all = [], []
+    for k in range(n_seeds):
+        stream = pol.stream(M, seed=SEED0 + k)
+        mults = np.stack([stream.step() for _ in range(steps)])
+        times, s_hist = _step_times(mults, policy)
+        times_all.append(times)
+        s_all.append(s_hist)
+    t = np.concatenate(times_all)
+    s = np.concatenate(s_all)
+    return {
+        "bench": "train_coded",
+        "onset": onset,
+        "slow_factor": slow if onset > 0 else 0.0,
+        "policy": policy,
+        "n_workers": M,
+        "steps": steps,
+        "n_seeds": n_seeds,
+        "tokens_per_sec": TOKENS_PER_STEP * len(t) / float(t.sum()),
+        "p50_step": float(np.percentile(t, 50)),
+        "p99_step": float(np.percentile(t, 99)),
+        "mean_step": float(t.mean()),
+        "mean_s": float(s.mean()),
+    }
+
+
+def _fidelity_rows(quick: bool) -> list[dict]:
+    """Real jit'd train-step checks backing the model-time arms."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.data import make_pipeline
+    from repro.models import ModelConfig, build_model
+    from repro.optim import AdamWConfig
+    from repro.train.loop import TrainConfig, init_train_state, make_train_step
+
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=16,
+                      n_heads=2, n_kv_heads=2, d_ff=32, vocab=32)
+    model = build_model(cfg)
+    opt = AdamWConfig(lr=1e-2)
+    pipe = make_pipeline(cfg, seq=16, global_batch=8)
+    batch = jax.tree.map(jnp.asarray, pipe.batch(0))
+    m = 4
+
+    def pdiff(a, b):
+        return max(
+            float(np.abs(np.asarray(x, np.float32) - np.asarray(y, np.float32)).max())
+            for x, y in zip(jax.tree.leaves(a["params"]), jax.tree.leaves(b["params"]))
+        )
+
+    def row(check, value, passed, note):
+        return {"bench": "train_fidelity", "policy": "fidelity", "check": check,
+                "value": float(value), "passed": bool(passed), "note": note}
+
+    rows = []
+    tc = TrainConfig(microbatches=m, gradient_coding="cyclic", gc_stragglers=1)
+    plain = jax.jit(make_train_step(model, opt, TrainConfig(microbatches=m)))
+    coded = jax.jit(make_train_step(model, opt, tc))
+    s_plain, _ = plain(init_train_state(model, jax.random.key(0), opt), batch)
+    s_ones, _ = coded(init_train_state(model, jax.random.key(0), opt),
+                      batch, jnp.ones(m))
+    d = pdiff(s_plain, s_ones)
+    rows.append(row("coded_eq_plain_all_ones", d, d < 2e-5,
+                    "max param diff, coded all-ones vs plain"))
+
+    worst = 0.0
+    for drop in range(m):
+        mask = np.ones(m)
+        mask[drop] = 0.0
+        s_d, met = coded(init_train_state(model, jax.random.key(0), opt),
+                         batch, jnp.asarray(mask, jnp.float32))
+        assert float(met["ok"]) == 1.0
+        worst = max(worst, pdiff(s_ones, s_d))
+    rows.append(row("recovery_every_le_s_mask", worst, worst < 5e-4,
+                    "worst param diff vs all-ones over all 1-straggler masks"))
+
+    st0 = init_train_state(model, jax.random.key(0), opt)
+    s_bad, met = coded(st0, batch, jnp.asarray([1.0, 0.0, 0.0, 1.0]))
+    d = pdiff({"params": st0["params"]}, {"params": s_bad["params"]})
+    rows.append(row("unrecoverable_mask_skips", d,
+                    float(met["ok"]) == 0.0 and d == 0.0,
+                    "param drift across a skipped (>s stragglers) step"))
+
+    tcc = TrainConfig(microbatches=m, gradient_coding="cyclic",
+                      gc_stragglers=1, compression="int8")
+    stepc = jax.jit(make_train_step(model, opt, tcc))
+    st = init_train_state(model, jax.random.key(0), opt, tcc)
+    n = 15 if quick else 40
+    losses = []
+    for i in range(n):
+        mask = np.ones(m)  # rotating single straggler
+        mask[i % m] = 0.0
+        st, mc = stepc(st, jax.tree.map(jnp.asarray, pipe.batch(i)),
+                       jnp.asarray(mask, jnp.float32))
+        losses.append(float(mc["loss"]))
+    head, tail = np.mean(losses[:5]), np.mean(losses[-5:])
+    rows.append(row("compressed_coded_loss_decreases", tail - head, tail < head,
+                    f"mean(last5)-mean(first5) over {n} int8+EF coded steps"))
+    return rows
+
+
+def run(quick: bool = False) -> None:
+    steps = 1500 if quick else 20000
+    n_seeds = 2 if quick else 6
+    rows = []
+    for onset, slow in CELLS:
+        cell = {}
+        for policy in POLICIES:
+            r = _cell(onset, slow, policy, steps, n_seeds)
+            cell[policy] = r
+            rows.append(r)
+        # ---- acceptance relations, per cell ------------------------------
+        un, co, orc = cell["uncoded"], cell["coded"], cell["oracle"]
+        eps = 1e-9
+        assert orc["tokens_per_sec"] >= max(un["tokens_per_sec"],
+                                            co["tokens_per_sec"]) - eps, \
+            f"oracle not an upper bound on tokens/sec in ({onset}, {slow})"
+        assert orc["p99_step"] <= min(un["p99_step"], co["p99_step"]) + eps, \
+            f"oracle not a lower bound on p99 in ({onset}, {slow})"
+        if onset > 0.0:
+            assert co["tokens_per_sec"] > un["tokens_per_sec"], (
+                f"coded tokens/sec not above uncoded in ({onset}, {slow}): "
+                f"{co['tokens_per_sec']:.1f} <= {un['tokens_per_sec']:.1f}"
+            )
+            if slow >= 10.0:
+                assert co["p99_step"] < un["p99_step"], (
+                    f"coded p99 not below uncoded in ({onset}, {slow}): "
+                    f"{co['p99_step']:.2f} >= {un['p99_step']:.2f}"
+                )
+        else:
+            # healthy cluster: the controller must sit at s=0 (uncoded cost)
+            assert co["tokens_per_sec"] >= 0.995 * un["tokens_per_sec"], \
+                "coded arm pays for replication on a healthy cluster"
+    fid = _fidelity_rows(quick)
+    for r in fid:
+        assert r["passed"], f"fidelity check failed: {r['check']} ({r['note']})"
+    rows.extend(fid)
+    keys = ["onset", "slow_factor", "policy", "tokens_per_sec", "p50_step",
+            "p99_step", "mean_step", "mean_s", "check", "value", "passed"]
+    emit("BENCH_train", rows, keys=keys)
+
+
+if __name__ == "__main__":
+    run()

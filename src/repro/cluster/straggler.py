@@ -21,7 +21,12 @@ import numpy as np
 from repro.core.adaptive import ChurnEvent, ChurnSchedule
 from repro.utils.prng import rng as _rng
 
-__all__ = ["StragglerPolicy", "ChurnPolicy"]
+__all__ = [
+    "StragglerPolicy",
+    "MarkovStragglerPolicy",
+    "MarkovStragglerStream",
+    "ChurnPolicy",
+]
 
 
 @dataclass(frozen=True)
@@ -38,6 +43,79 @@ class StragglerPolicy:
         g = _rng(seed)
         hit = g.uniform(size=n_workers) < self.prob
         return np.where(hit, self.slowdown, 1.0)
+
+
+@dataclass(frozen=True)
+class MarkovStragglerPolicy:
+    """Per-worker two-state Markov straggling for the training path.
+
+    The serve bench's ``StragglerInjection`` (serve/scheduler.py) with the
+    same semantics, reused per *training step* instead of per decode step:
+
+    onset       — per-worker per-step probability a healthy worker turns slow
+                  (stationary slow fraction = onset·persistence /
+                  (1 + onset·persistence)).
+    slow_factor — compute-time multiplier while slow.
+    persistence — mean steps a slow regime lasts (geometric sojourn).
+    noise       — multiplicative healthy jitter: time × (1 + noise·U).
+    """
+
+    onset: float = 0.0
+    slow_factor: float = 3.0
+    persistence: float = 25.0
+    noise: float = 0.1
+
+    def __post_init__(self):
+        if not 0.0 <= self.onset < 1.0 or self.slow_factor < 1.0:
+            raise ValueError(f"bad Markov straggler policy {self}")
+        if self.persistence < 1.0 or self.noise < 0.0:
+            raise ValueError(f"bad Markov straggler policy {self}")
+
+    @property
+    def stationary_slow_fraction(self) -> float:
+        return self.onset * self.persistence / (1.0 + self.onset * self.persistence)
+
+    @classmethod
+    def from_stationary(
+        cls,
+        prob: float,
+        slow_factor: float = 3.0,
+        persistence: float = 25.0,
+        noise: float = 0.1,
+    ) -> "MarkovStragglerPolicy":
+        """Policy whose stationary slow fraction equals the paper's i.i.d.
+        straggler probability (§5.3.1's prob=0.2, slowdown=3 maps here)."""
+        if not 0.0 <= prob < 1.0:
+            raise ValueError(f"prob must be in [0, 1), got {prob}")
+        onset = prob / (persistence * (1.0 - prob))
+        return cls(onset=onset, slow_factor=slow_factor,
+                   persistence=persistence, noise=noise)
+
+    def stream(self, n_workers: int, seed: int = 0) -> "MarkovStragglerStream":
+        return MarkovStragglerStream(n_workers, self, seed)
+
+
+class MarkovStragglerStream:
+    """Seeded per-step worker compute-time multipliers under
+    ``MarkovStragglerPolicy`` (mirrors serve's ``ShardLatencyModel``)."""
+
+    def __init__(self, n_workers: int, policy: MarkovStragglerPolicy, seed: int = 0):
+        self.n_workers = int(n_workers)
+        self.policy = policy
+        self._rng = np.random.default_rng(seed)
+        self.slow = np.zeros(self.n_workers, bool)
+
+    def step(self) -> np.ndarray:
+        """Advance regimes one step; realized multiplier per worker (≥ 1)."""
+        pol = self.policy
+        mult = 1.0 + pol.noise * self._rng.random(self.n_workers)
+        if pol.onset > 0.0:
+            u = self._rng.random(self.n_workers)
+            recover = self.slow & (u < 1.0 / pol.persistence)
+            onset = ~self.slow & (u < pol.onset)
+            self.slow = (self.slow & ~recover) | onset
+            mult = np.where(self.slow, mult * pol.slow_factor, mult)
+        return mult
 
 
 @dataclass(frozen=True)

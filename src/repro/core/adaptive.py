@@ -74,6 +74,7 @@ __all__ = [
     "padded_allocation",
     "ParityController",
     "DeadlineAwareParity",
+    "ReplicationController",
 ]
 
 _ALPHA_FLOOR = 1e-12
@@ -1589,6 +1590,138 @@ class ParityController:
     def parity_level(self, max_parity: int) -> int:
         """Shards to drop this step: the posterior-majority straggler count."""
         return int(min(max_parity, int((self.posterior > 0.5).sum())))
+
+
+class ReplicationController:
+    """Training-side analogue of ``ParityController``: pick the gradient-
+    coding replication level s per step from online worker-speed posteriors.
+
+    Feeds on the per-worker step latencies the train launcher already
+    measures and keeps an exponentially-weighted *multiplier* posterior per
+    worker (latency over the step's lower-quartile baseline, so a healthy
+    worker sits near 1 and a 3×-slow worker converges to ~3 within a few
+    steps; the 25th percentile stays a healthy reference even when a
+    majority of workers are slow, where the median would not).  Unlike the
+    parity controller — which only counts convicted stragglers — this one
+    prices the actual trade replication controls: raising s costs every
+    worker (s+1)× the compute, but lets the step finish at the (m−s)-th
+    fastest message instead of the slowest.
+
+    The baseline decision is the cost-model argmin over allowed levels,
+
+        s* = argmin_s  (s+1) · sort(mult)[m−s−1],
+
+    which degrades to s=0 (uncoded) on a homogeneous cluster — replication
+    is bought only when the posterior says stragglers are slow enough to
+    pay for it.  The same formula with the TRUE multipliers is the
+    known-rates oracle the train bench compares against.
+
+    On top of it sits a CVaR-style tail term: the argmin alone is blind to
+    *onsets* — a kept worker turning slow THIS step stalls the whole step
+    at (s+1)·spike before any posterior can react, and when onsets are
+    p99-frequent that is exactly what the step-time tail is made of.  The
+    controller keeps EW estimates of the per-worker onset rate and of the
+    spike magnitude, and scores each level by
+
+        risk(s) = (s+1) · [ (1−q)·srt[m−s−1] + tail_risk·q·srt1[m−s−1] ],
+
+    where q = (m−s)·onset_rate and srt1 is the sorted posterior with one
+    healthy worker replaced by a spike.  A margin level (s = believed-slow
+    + 1) makes srt1[m−s−1] healthy — the onset is absorbed by the spare
+    message — so under violent spikes (10–50×) the risk term buys one
+    level of slack, while under mild 3× spikes or rare onsets the premium
+    isn't worth it and the pure argmin wins.  ``tail_risk`` is the
+    weight of the tail branch relative to the mean (≈ how many mean-steps
+    one blown p99 step is worth); 0 recovers the plain argmin.
+    """
+
+    def __init__(
+        self,
+        n_workers: int,
+        decay: float = 0.7,
+        cap: float = 1e3,
+        tail_risk: float = 10.0,
+        conviction: float = 2.0,
+        onset_prior: float = 1e-3,
+        spike_prior: float = 10.0,
+        rate_decay: float = 0.995,
+        spike_decay: float = 0.9,
+    ):
+        if not 0.0 <= decay < 1.0 or n_workers < 1 or cap < 1.0:
+            raise ValueError("bad ReplicationController config")
+        if tail_risk < 0 or conviction <= 1.0 or onset_prior < 0:
+            raise ValueError("bad ReplicationController risk config")
+        if not 0.0 < rate_decay < 1.0 or not 0.0 < spike_decay < 1.0:
+            raise ValueError("decays must be in (0, 1)")
+        self.n_workers = int(n_workers)
+        self.decay = float(decay)
+        self.cap = float(cap)
+        self.tail_risk = float(tail_risk)
+        self.conviction = float(conviction)
+        self.mult = np.ones(n_workers, dtype=np.float64)
+        self._onset_rate = float(onset_prior)
+        self._spike = float(spike_prior)
+        self._rate_decay = float(rate_decay)
+        self._spike_decay = float(spike_decay)
+        self._prev_convicted = np.zeros(n_workers, dtype=bool)
+
+    def observe(self, latency: np.ndarray) -> None:
+        """Fold one step's per-worker latencies into the posteriors.
+
+        Latencies are normalized by the step's lower-quartile baseline;
+        unreachable workers (inf/nan) count as ``cap``-slow and re-earn
+        their place on recovery.
+        """
+        lat = np.asarray(latency, dtype=np.float64)
+        if lat.shape != (self.n_workers,):
+            raise ValueError(f"latency must be [{self.n_workers}], got {lat.shape}")
+        finite = np.isfinite(lat)
+        base = float(np.percentile(lat[finite], 25)) if finite.any() else 1.0
+        base = max(base, 1e-300)
+        obs = np.where(finite, np.clip(lat / base, 0.0, self.cap), self.cap)
+        self.mult = self.decay * self.mult + (1.0 - self.decay) * obs
+        convicted = self.mult > self.conviction
+        new = convicted & ~self._prev_convicted
+        healthy_prev = int((~self._prev_convicted).sum())
+        rd = self._rate_decay
+        self._onset_rate = rd * self._onset_rate + (1.0 - rd) * (
+            float(new.sum()) / max(healthy_prev, 1)
+        )
+        if convicted.any():
+            sd = self._spike_decay
+            self._spike = sd * self._spike + (1.0 - sd) * float(
+                self.mult[convicted].mean()
+            )
+        self._prev_convicted = convicted
+
+    @staticmethod
+    def step_cost(mult: np.ndarray, s: int) -> float:
+        """Predicted relative step time at replication s for worker
+        multipliers ``mult``: every worker does (s+1)× the work, the step
+        completes at the (m−s)-th fastest arrival (cyclic-code geometry)."""
+        m = len(mult)
+        if not 0 <= s < m:
+            raise ValueError(f"s={s} out of range for {m} workers")
+        return float((s + 1) * np.sort(np.asarray(mult, np.float64))[m - s - 1])
+
+    def replication(self, levels) -> int:
+        """Risk-adjusted cost-model argmin over the allowed levels."""
+        levels = sorted(set(int(s) for s in levels))
+        if not levels:
+            raise ValueError("no replication levels given")
+        m = self.n_workers
+        srt = np.sort(self.mult)
+        # one previously-healthy worker spikes: drop the fastest, add a spike
+        srt1 = np.sort(np.append(srt[1:], max(self._spike, srt[0])))
+
+        def risk(s: int) -> float:
+            base = self.step_cost(self.mult, s)  # validates the level
+            q = min((m - s) * self._onset_rate, 1.0)
+            return (1.0 - q) * base + self.tail_risk * q * (
+                (s + 1) * srt1[m - s - 1]
+            )
+
+        return min(levels, key=risk)
 
 
 class DeadlineAwareParity:

@@ -28,7 +28,13 @@ import jax.numpy as jnp
 
 from repro.utils.prng import rng as _rng
 
-__all__ = ["GradCode", "frc_code", "cyclic_code", "decode_weights"]
+__all__ = [
+    "GradCode",
+    "frc_code",
+    "cyclic_code",
+    "decode_weights",
+    "decode_weights_checked",
+]
 
 
 @dataclass(frozen=True)
@@ -85,6 +91,10 @@ def cyclic_code(n_workers: int, s: int, seed: int = 0) -> GradCode:
     pattern.  (Random coefficients on the support do NOT satisfy this.)
     """
     n = n_workers
+    if s == 0:
+        # degenerate no-redundancy code: B = I (worker i sends grad_i).  The
+        # Algorithm-2 loop below would build H with zero rows; short-circuit.
+        return GradCode(b=np.eye(n, dtype=np.float64), s=0, kind="cyclic")
     for attempt in range(64):  # resample H if an unlucky draw gives huge coeffs
         g = _rng(seed + 1000003 * attempt)
         h = g.standard_normal((s, n))
@@ -108,9 +118,27 @@ def cyclic_code(n_workers: int, s: int, seed: int = 0) -> GradCode:
 def decode_weights(code: GradCode, mask: jnp.ndarray) -> jnp.ndarray:
     """v(mask) with vᵀ (M B) = 1ᵀ — the recombination weights.
 
-    FRC: exact closed form — first survivor of each group gets weight 1.
-    CRC: regularized least-squares on the (n x n) masked generator + one
-    refinement step.  Fixed shapes throughout (jit/shard-safe).
+    Unchecked variant: with > s stragglers the returned weights are garbage
+    (FRC: zero selector for a dead group; CRC: LS on a rank-deficient
+    generator).  Callers that feed live masks must use
+    :func:`decode_weights_checked` and act on the ``ok`` flag.
+    """
+    v, _ = decode_weights_checked(code, mask)
+    return v
+
+
+def decode_weights_checked(
+    code: GradCode, mask: jnp.ndarray, *, tol: float = 1e-3
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(v, ok) — recombination weights plus a jit-safe recoverability flag.
+
+    FRC: exact closed form — first survivor of each group gets weight 1;
+    ``ok`` iff every (s+1)-group has at least one survivor.
+    CRC: regularized least-squares on the (n x n) masked generator + two
+    refinement steps; ``ok`` iff at least n-s messages survive (the span
+    condition guarantees decode) AND the LS residual ||A v - 1||_inf stays
+    under ``tol`` (guards numerical rank loss).  Fixed shapes throughout
+    (jit/shard-safe): ``ok`` is a scalar bool array, never a Python branch.
     """
     m = mask.astype(jnp.float32)
     if code.kind == "frc":
@@ -119,7 +147,8 @@ def decode_weights(code: GradCode, mask: jnp.ndarray) -> jnp.ndarray:
         # weight 1 for the first alive worker in each group, 0 elsewhere
         first = jnp.cumsum(groups, axis=1) * groups  # 1 at first alive, >1 after
         sel = (first == 1.0).astype(jnp.float32)
-        return sel.reshape(n)
+        ok = jnp.all(groups.sum(axis=1) >= 1.0)
+        return sel.reshape(n), ok
     b = jnp.asarray(code.b, dtype=jnp.float32)
     a = (b * m[:, None]).T                   # [n_shards, n]:  A v = 1
     pinv = jnp.linalg.pinv(a, rtol=1e-6)     # SVD — avoids cond² of normal eqs
@@ -127,4 +156,6 @@ def decode_weights(code: GradCode, mask: jnp.ndarray) -> jnp.ndarray:
     v = pinv @ ones
     for _ in range(2):                       # refinement against A itself
         v = v + pinv @ (ones - a @ v)
-    return v * m
+    enough = m.sum() >= code.n_workers - code.s
+    resid_ok = jnp.max(jnp.abs(a @ v - ones)) < tol
+    return v * m, jnp.logical_and(enough, resid_ok)

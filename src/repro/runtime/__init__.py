@@ -3,6 +3,11 @@ from repro.runtime.checkpoint import (  # noqa: F401
     latest_step,
     restore_checkpoint,
     save_checkpoint,
+    wait_for_saves,
 )
 from repro.runtime.health import HealthMonitor  # noqa: F401
-from repro.runtime.elastic import plan_mesh_shape, reshard  # noqa: F401
+from repro.runtime.elastic import (  # noqa: F401
+    plan_mesh_shape,
+    reshard,
+    shrink_mesh,
+)

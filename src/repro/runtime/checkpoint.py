@@ -19,6 +19,7 @@ restarted job with a *different* mesh (elastic shrink/grow) resumes.
 """
 from __future__ import annotations
 
+import itertools
 import json
 import os
 import shutil
@@ -34,10 +35,14 @@ __all__ = [
     "restore_checkpoint",
     "latest_step",
     "gc_checkpoints",
+    "wait_for_saves",
 ]
 
 _MANIFEST = "manifest.json"
-_pending: list[threading.Thread] = []
+_lock = threading.Lock()
+_pending: list[tuple[threading.Thread, list]] = []  # (thread, error box)
+_inflight: set[str] = set()                         # abs tmp dirs being written
+_tmp_counter = itertools.count()
 
 
 def _path_str(path) -> str:
@@ -64,8 +69,12 @@ def _resolve_dtype(name: str) -> np.dtype:
         return np.dtype(getattr(ml_dtypes, name))
 
 
-def _write(dirpath: str, step: int, flat: list[tuple[str, np.ndarray]]) -> str:
-    tmp = os.path.join(dirpath, f".tmp-{step}")
+def _write(
+    dirpath: str, step: int, flat: list[tuple[str, np.ndarray]], tmp: str | None = None
+) -> str:
+    # unique tmp per write: two saves of the same step (async + final
+    # blocking, a retried save) must never share a staging dir
+    tmp = tmp or os.path.join(dirpath, f".tmp-{step}-{next(_tmp_counter)}")
     final = os.path.join(dirpath, f"step_{step:08d}")
     os.makedirs(tmp, exist_ok=True)
     manifest = {"step": step, "leaves": {}}
@@ -95,16 +104,42 @@ def save_checkpoint(dirpath: str, step: int, tree: Any, blocking: bool = True) -
     ]
     if blocking:
         return _write(dirpath, step, flat)
-    t = threading.Thread(target=_write, args=(dirpath, step, flat), daemon=True)
+    tmp = os.path.abspath(
+        os.path.join(dirpath, f".tmp-{step}-{next(_tmp_counter)}")
+    )
+
+    def run(box: list) -> None:
+        try:
+            _write(dirpath, step, flat, tmp=tmp)
+        except BaseException as e:  # noqa: BLE001 - re-raised from wait_for_saves
+            box.append(e)
+        finally:
+            with _lock:
+                _inflight.discard(tmp)
+
+    box: list = []
+    t = threading.Thread(target=run, args=(box,), daemon=True)
+    with _lock:
+        _inflight.add(tmp)
+        _pending.append((t, box))
     t.start()
-    _pending.append(t)
     return os.path.join(dirpath, f"step_{step:08d}")
 
 
 def wait_for_saves() -> None:
-    for t in _pending:
+    """Join all in-flight async saves; re-raise the first background error.
+
+    A failed write must not masquerade as a saved checkpoint: any exception
+    captured on a save thread surfaces here (remaining threads are still
+    joined first, so no writer is left running)."""
+    with _lock:
+        pending, _pending[:] = _pending[:], []
+    errors: list[BaseException] = []
+    for t, box in pending:
         t.join()
-    _pending.clear()
+        errors.extend(box)
+    if errors:
+        raise errors[0]
 
 
 def latest_step(dirpath: str) -> int | None:
@@ -153,13 +188,35 @@ def restore_checkpoint(
 
 
 def gc_checkpoints(dirpath: str, keep: int = 3) -> list[int]:
-    """Delete all but the newest ``keep`` complete checkpoints."""
+    """Delete all but the newest ``keep`` *complete* checkpoints.
+
+    Only dirs with a manifest (the same completeness predicate as
+    ``latest_step``) count toward ``keep`` — an interrupted write must not
+    shadow a complete checkpoint out of the retention window.  Incomplete
+    ``step_*`` dirs (crash after rename started, never finished the
+    manifest) and orphaned ``.tmp-<step>`` dirs are swept unconditionally,
+    except for ``.tmp`` dirs belonging to still-running async saves."""
     if not os.path.isdir(dirpath):
         return []
-    steps = sorted(
-        int(d.split("_")[1]) for d in os.listdir(dirpath) if d.startswith("step_")
-    )
-    dropped = steps[:-keep] if keep > 0 else steps
+    complete, incomplete = [], []
+    for d in os.listdir(dirpath):
+        if d.startswith("step_"):
+            s = int(d.split("_")[1])
+            if os.path.exists(os.path.join(dirpath, d, _MANIFEST)):
+                complete.append(s)
+            else:
+                incomplete.append(d)
+    dropped = sorted(complete)[:-keep] if keep > 0 else sorted(complete)
     for s in dropped:
         shutil.rmtree(os.path.join(dirpath, f"step_{s:08d}"), ignore_errors=True)
+    for d in incomplete:
+        shutil.rmtree(os.path.join(dirpath, d), ignore_errors=True)
+    with _lock:
+        inflight = set(_inflight)
+    for d in os.listdir(dirpath):
+        if not d.startswith(".tmp-"):
+            continue
+        if os.path.abspath(os.path.join(dirpath, d)) in inflight:
+            continue  # an async save is mid-write here; it renames on finish
+        shutil.rmtree(os.path.join(dirpath, d), ignore_errors=True)
     return dropped

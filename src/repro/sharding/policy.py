@@ -189,13 +189,20 @@ class ShardingPolicy:
         )
 
     def state_specs(self, state_shapes: Any) -> Any:
-        """Specs for a full TrainState {'params': ..., 'opt': ...}."""
+        """Specs for a full TrainState {'params': ..., 'opt': ..[, 'err': ..]}.
+
+        The ``err`` tree (error-feedback residuals for compressed coded
+        messages) mirrors params with a leading [n_workers] message axis:
+        that axis stays unsharded, the rest inherits the param spec."""
 
         def fn(path, x):
             ps = _path_str(path)
             root, _, rest = ps.partition("/")
             if root == "params":
                 return self.param_spec(rest, tuple(x.shape))
+            if root == "err":
+                base = tuple(self.param_spec(rest, tuple(x.shape[1:])))
+                return self.fit((None,) + base, tuple(x.shape))
             return self.opt_spec(rest, tuple(x.shape))
 
         return jax.tree_util.tree_map_with_path(fn, state_shapes)

@@ -10,7 +10,15 @@ activation hints in ``repro.sharding.ctx``.  Straggler tolerance:
     ``n_workers`` redundant messages (FRC/CRC, ``repro.core.gradient_coding``);
     a straggler mask then *drops* messages and the decode weights recover
     the exact gradient sum.  This is the paper's coded-computation idea
-    applied to the training path (beyond-paper; DESIGN.md §2).
+    applied to the training path (beyond-paper; DESIGN.md §2, §12).
+
+Unrecoverable masks (> s stragglers, or a whole FRC group dead) set
+``metrics["ok"] = 0`` and the step becomes an identity on params+opt — the
+optimizer never sees a zero/partial gradient.  With
+``TrainConfig.compression`` the coded messages are int8-quantized with
+error feedback (``optim.compression``); the residual rides in
+``state["err"]`` and is carried across steps, masked or not (residuals
+live at the sender, which eventually finishes its compute).
 """
 from __future__ import annotations
 
@@ -20,13 +28,19 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.gradient_coding import GradCode, cyclic_code, decode_weights, frc_code
+from repro.core.gradient_coding import (
+    GradCode,
+    cyclic_code,
+    decode_weights_checked,
+    frc_code,
+)
 from repro.models.registry import Model
 from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+from repro.optim.compression import compress_with_feedback, decompress
 
-__all__ = ["TrainConfig", "TrainState", "make_train_step"]
+__all__ = ["TrainConfig", "TrainState", "make_train_step", "init_train_state"]
 
-TrainState = dict  # {"params": pytree, "opt": dict}
+TrainState = dict  # {"params": pytree, "opt": dict[, "err": pytree]}
 
 
 @dataclass(frozen=True)
@@ -35,6 +49,16 @@ class TrainConfig:
     aux_weight: float = 0.01
     gradient_coding: str | None = None   # None | 'frc' | 'cyclic'
     gc_stragglers: int = 1               # tolerated stragglers s
+    compression: str | None = None       # None | 'int8' (coded messages only)
+
+    def __post_init__(self):
+        if self.compression is not None and self.compression != "int8":
+            raise ValueError(f"unknown compression {self.compression!r}")
+        if self.compression is not None and self.gradient_coding is None:
+            raise ValueError(
+                "compression wraps the coded message exchange; it requires "
+                "gradient_coding to be set"
+            )
 
 
 def _split_microbatches(batch: dict, m: int) -> dict:
@@ -56,7 +80,10 @@ def make_train_step(
     """Returns ``step(state, batch, straggler_mask=None) -> (state, metrics)``.
 
     ``straggler_mask`` (only in gradient-coding mode) is a [n_workers] 0/1
-    vector: which coded gradient messages arrived this round.
+    vector: which coded gradient messages arrived this round.  Metrics carry
+    the model's own metrics (ce/aux/...) on every path, plus — in coded mode
+    — ``ok``: 1.0 if the mask was decodable, 0.0 if the step was skipped
+    (params and optimizer state pass through unchanged).
 
     ``grad_shardings`` (param-tree of NamedSharding, optional): constrains
     the microbatch gradient ACCUMULATOR.  Without it XLA keeps the scan
@@ -73,6 +100,7 @@ def make_train_step(
         code = cyclic_code(m, train_cfg.gc_stragglers)
     elif train_cfg.gradient_coding is not None:
         raise ValueError(f"unknown gradient coding {train_cfg.gradient_coding!r}")
+    compress = train_cfg.compression is not None
 
     def loss_fn(params, mb):
         loss, metrics = model.loss(params, mb)
@@ -94,47 +122,57 @@ def make_train_step(
             return loss, metrics, grads
         mbs = _split_microbatches(batch, m)
 
-        def body(carry, mb):
-            acc, loss_acc = carry
-            (loss, _), grads = grad_fn(params, mb)
+        def body(acc, mb):
+            (loss, metrics), grads = grad_fn(params, mb)
             acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32) / m, acc, grads)
             acc = _constrain(acc)
-            return (acc, loss_acc + loss / m), None
+            return acc, (loss, metrics)
 
         zeros = _constrain(
             jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
         )
-        (grads, loss), _ = jax.lax.scan(body, (zeros, jnp.zeros((), jnp.float32)), mbs)
-        return loss, {}, grads
+        grads, (losses, metrics) = jax.lax.scan(body, zeros, mbs)
+        return losses.mean(), jax.tree.map(lambda x: x.mean(0), metrics), grads
 
-    def coded_grads(params, batch, mask):
-        """n_workers == microbatches; message_i = sum_j B[i,j] grad_j."""
+    def coded_grads(params, batch, mask, err):
+        """n_workers == microbatches; message_i = sum_j B[i,j] grad_j.
+
+        Loss/metrics are decoded with the same recombination weights as the
+        gradients (w = vᵀ M B, per-shard weights): with an all-ones mask w
+        is exactly 1ᵀ and this equals the plain microbatch mean; under a
+        decodable mask it is the survivor-decoded mean — masked-out
+        microbatches never contaminate the reported loss.
+        """
         mbs = _split_microbatches(batch, m)
         bmat = jnp.asarray(code.b, jnp.float32)  # [n, n_shards]
 
-        def body(carry, inp):
-            msgs, loss_acc = carry
+        def body(msgs, inp):
             mb, bcol = inp  # bcol = B[:, j]
-            (loss, _), grads = grad_fn(params, mb)
+            (loss, metrics), grads = grad_fn(params, mb)
             msgs = jax.tree.map(
                 lambda ms, g: ms
                 + bcol.reshape((m,) + (1,) * g.ndim) * g.astype(jnp.float32)[None],
                 msgs,
                 grads,
             )
-            return (msgs, loss_acc + loss / m), None
+            return msgs, (loss, metrics)
 
         zeros = jax.tree.map(
             lambda p: jnp.zeros((m,) + p.shape, jnp.float32), params
         )
-        (msgs, loss), _ = jax.lax.scan(
-            body, (zeros, jnp.zeros((), jnp.float32)), (mbs, bmat.T)
-        )
-        v = decode_weights(code, mask)  # [n]
-        grads = jax.tree.map(
-            lambda ms: jnp.tensordot(v * mask, ms, axes=1) / m, msgs
-        )
-        return loss, {}, grads
+        msgs, (losses, mb_metrics) = jax.lax.scan(body, zeros, (mbs, bmat.T))
+
+        if compress:
+            msgs, err = compress_with_feedback(msgs, err)
+            msgs = decompress(msgs)
+
+        v, ok = decode_weights_checked(code, mask)
+        vm = v * mask
+        grads = jax.tree.map(lambda ms: jnp.tensordot(vm, ms, axes=1) / m, msgs)
+        w = vm @ bmat  # [n_shards] decode weights for per-shard scalars
+        loss = jnp.dot(w, losses) / m
+        metrics = jax.tree.map(lambda x: jnp.tensordot(w, x, axes=1) / m, mb_metrics)
+        return loss, metrics, grads, err, ok
 
     def step(state: TrainState, batch: dict, straggler_mask=None):
         params = state["params"]
@@ -144,18 +182,48 @@ def make_train_step(
                 if straggler_mask is not None
                 else jnp.ones((m,), jnp.float32)
             )
-            loss, metrics, grads = coded_grads(params, batch, mask)
+            err = state.get("err")
+            if compress and err is None:
+                raise KeyError(
+                    "compression is enabled but state has no 'err' tree; "
+                    "build the state with init_train_state(..., train_cfg=cfg)"
+                )
+            loss, metrics, grads, new_err, ok = coded_grads(
+                params, batch, mask, err
+            )
         else:
             loss, metrics, grads = plain_grads(params, batch)
+            new_err, ok = None, None
         new_params, new_opt, opt_metrics = adamw_update(
             params, grads, state["opt"], opt_cfg
         )
-        out = {"loss": loss, **opt_metrics}
-        return {"params": new_params, "opt": new_opt}, out
+        out = {"loss": loss, **metrics, **opt_metrics}
+        if ok is not None:
+            # unrecoverable mask: identity step — never apply a garbage
+            # gradient.  jnp.where keeps this jit-safe (fixed shapes).
+            new_params = jax.tree.map(
+                lambda new, old: jnp.where(ok, new, old), new_params, params
+            )
+            new_opt = jax.tree.map(
+                lambda new, old: jnp.where(ok, new, old), new_opt, state["opt"]
+            )
+            out["ok"] = ok.astype(jnp.float32)
+        new_state = {"params": new_params, "opt": new_opt}
+        if new_err is not None:
+            new_state["err"] = new_err
+        return new_state, out
 
     return step
 
 
-def init_train_state(model: Model, key, opt_cfg: AdamWConfig) -> TrainState:
+def init_train_state(
+    model: Model, key, opt_cfg: AdamWConfig, train_cfg: TrainConfig | None = None
+) -> TrainState:
     params = model.init(key)
-    return {"params": params, "opt": init_opt_state(params, opt_cfg)}
+    state = {"params": params, "opt": init_opt_state(params, opt_cfg)}
+    if train_cfg is not None and train_cfg.compression is not None:
+        m = train_cfg.microbatches
+        state["err"] = jax.tree.map(
+            lambda p: jnp.zeros((m,) + p.shape, jnp.float32), params
+        )
+    return state

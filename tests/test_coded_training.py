@@ -1,0 +1,216 @@
+"""Coded training end to end (DESIGN.md §12): recoverability detection,
+skip-don't-corrupt, compression around the coded exchange, the online
+replication controller, and the elastic death drill."""
+import itertools
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.cluster.straggler import MarkovStragglerPolicy
+from repro.core.adaptive import ReplicationController
+from repro.core.gradient_coding import (
+    cyclic_code,
+    decode_weights_checked,
+    frc_code,
+)
+from repro.data import make_pipeline
+from repro.models import ModelConfig, build_model
+from repro.optim import AdamWConfig
+from repro.train.loop import TrainConfig, init_train_state, make_train_step
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # pragma: no cover - CI image without hypothesis
+    from minihyp import given, settings, strategies as st
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _tiny():
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=16,
+                      n_heads=2, n_kv_heads=2, d_ff=32, vocab=32)
+    model = build_model(cfg)
+    pipe = make_pipeline(cfg, seq=16, global_batch=8)
+    return model, pipe
+
+
+def _ground_truth_ok(code, mask: np.ndarray) -> bool:
+    if code.kind == "frc":
+        groups = mask.reshape(-1, code.s + 1)
+        return bool((groups.sum(axis=1) >= 1).all())
+    return bool(mask.sum() >= code.n_workers - code.s)
+
+
+@pytest.mark.parametrize("code_fn,n,s", [
+    (frc_code, 4, 1), (frc_code, 6, 2), (frc_code, 6, 0),
+    (cyclic_code, 5, 1), (cyclic_code, 6, 2), (cyclic_code, 6, 0),
+])
+def test_decode_checked_flag_exhaustive(code_fn, n, s):
+    """Over EVERY mask: the jit-safe ok flag equals ground-truth
+    recoverability, and flagged-ok masks decode the exact gradient sum."""
+    code = code_fn(n, s)
+    g = np.random.default_rng(0).standard_normal((n, 5))
+    msgs = code.b @ g
+    want = g.sum(axis=0)
+    for bits in itertools.product([0.0, 1.0], repeat=n):
+        mask = np.asarray(bits)
+        v, ok = decode_weights_checked(code, jnp.asarray(mask, jnp.float32))
+        assert bool(ok) == _ground_truth_ok(code, mask), f"mask={mask}"
+        if bool(ok):
+            got = np.asarray(v) @ (msgs * mask[:, None])
+            assert np.abs(got - want).max() / np.abs(want).max() < 5e-3
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(min_value=4, max_value=8),
+       s=st.integers(min_value=0, max_value=3),
+       seed=st.integers(min_value=0, max_value=10**6))
+def test_coded_sum_matches_plain_prop(n, s, seed):
+    """Property: for both code kinds, every <= s straggler pattern decodes
+    the plain gradient sum exactly (FRC needs (s+1) | n)."""
+    s = min(s, n - 1)
+    codes = [cyclic_code(n, s)]
+    if n % (s + 1) == 0:
+        codes.append(frc_code(n, s))
+    g = np.random.default_rng(seed).standard_normal((n, 3))
+    want = g.sum(axis=0)
+    for code in codes:
+        msgs = code.b @ g
+        for k in range(s + 1):
+            for pat in itertools.combinations(range(n), k):
+                mask = np.ones(n)
+                mask[list(pat)] = 0.0
+                v, ok = decode_weights_checked(
+                    code, jnp.asarray(mask, jnp.float32))
+                assert bool(ok), (code.kind, n, s, pat)
+                got = np.asarray(v) @ (msgs * mask[:, None])
+                assert np.abs(got - want).max() / np.abs(want).max() < 5e-3
+
+
+def test_unrecoverable_step_is_skipped():
+    """A > s straggler pattern must flag ok=0 and leave params AND
+    optimizer state bit-identical — never fold a garbage decode in."""
+    model, pipe = _tiny()
+    opt = AdamWConfig(lr=1e-2)
+    step = jax.jit(make_train_step(model, opt, TrainConfig(
+        microbatches=4, gradient_coding="cyclic", gc_stragglers=1)))
+    batch = jax.tree.map(jnp.asarray, pipe.batch(0))
+    st0 = init_train_state(model, jax.random.key(0), opt)
+    st1, met = step(st0, batch, jnp.asarray([1.0, 0.0, 0.0, 1.0]))
+    assert float(met["ok"]) == 0.0
+    for key in ("params", "opt"):
+        for a, b in zip(jax.tree.leaves(st0[key]), jax.tree.leaves(st1[key])):
+            assert np.array_equal(np.asarray(a, np.float32),
+                                  np.asarray(b, np.float32))
+    # and a recoverable mask on the same state does make progress
+    st2, met2 = step(st0, batch, jnp.asarray([1.0, 0.0, 1.0, 1.0]))
+    assert float(met2["ok"]) == 1.0
+    diffs = [float(np.abs(np.asarray(a, np.float32) - np.asarray(b, np.float32)).max())
+             for a, b in zip(jax.tree.leaves(st0["params"]),
+                             jax.tree.leaves(st2["params"]))]
+    assert max(diffs) > 0.0
+
+
+def test_metrics_consistent_plain_vs_coded():
+    """Plain microbatched and coded steps report the same model metrics;
+    the coded loss under an all-ones mask is the plain mean loss."""
+    model, pipe = _tiny()
+    opt = AdamWConfig(lr=1e-2)
+    batch = jax.tree.map(jnp.asarray, pipe.batch(0))
+    plain = jax.jit(make_train_step(model, opt, TrainConfig(microbatches=4)))
+    coded = jax.jit(make_train_step(model, opt, TrainConfig(
+        microbatches=4, gradient_coding="cyclic", gc_stragglers=1)))
+    _, mp = plain(init_train_state(model, jax.random.key(0), opt), batch)
+    _, mc = coded(init_train_state(model, jax.random.key(0), opt),
+                  batch, jnp.ones(4))
+    assert set(mc) == set(mp) | {"ok"}
+    assert float(mc["loss"]) == pytest.approx(float(mp["loss"]), abs=1e-5)
+    assert float(mc["ce"]) == pytest.approx(float(mp["ce"]), abs=1e-5)
+
+
+def test_compression_error_feedback():
+    """int8+EF compression: the residual state exists, is updated, and the
+    coded loss still decreases under a rotating single straggler."""
+    model, pipe = _tiny()
+    opt = AdamWConfig(lr=1e-2)
+    tc = TrainConfig(microbatches=4, gradient_coding="cyclic",
+                     gc_stragglers=1, compression="int8")
+    step = jax.jit(make_train_step(model, opt, tc))
+    st0 = init_train_state(model, jax.random.key(0), opt, tc)
+    assert "err" in st0
+    assert all(x.shape[0] == 4 for x in jax.tree.leaves(st0["err"]))
+    losses, stt = [], st0
+    for i in range(12):
+        mask = np.ones(4)
+        mask[i % 4] = 0.0
+        stt, met = step(stt, jax.tree.map(jnp.asarray, pipe.batch(i)),
+                        jnp.asarray(mask, jnp.float32))
+        losses.append(float(met["loss"]))
+    assert any(float(np.abs(np.asarray(x)).max()) > 0.0
+               for x in jax.tree.leaves(stt["err"]))
+    assert np.mean(losses[-4:]) < np.mean(losses[:4])
+    # compression without coding is a config error
+    with pytest.raises(ValueError):
+        TrainConfig(microbatches=4, compression="int8")
+
+
+def test_replication_controller_policy():
+    """Homogeneous cluster -> s=0; a persistent violent straggler -> the
+    controller buys replication (possibly +1 margin against onsets); the
+    known-rates cost model is what the bench's oracle arm minimizes."""
+    rc = ReplicationController(8)
+    for _ in range(30):
+        rc.observe(np.ones(8))
+    assert rc.replication(range(8)) == 0
+    rc2 = ReplicationController(8)
+    lat = np.ones(8)
+    lat[5] = 50.0
+    for _ in range(30):
+        rc2.observe(lat)
+    s = rc2.replication(range(8))
+    assert 1 <= s <= 2  # covers the straggler, at most one margin level
+    # cost model sanity: with one 50x worker, s=1 beats s=0 8x over
+    assert ReplicationController.step_cost(lat, 1) * 8 < \
+        ReplicationController.step_cost(lat, 0)
+    with pytest.raises(ValueError):
+        ReplicationController.step_cost(lat, 8)
+
+
+def test_markov_straggler_stationary_fraction():
+    pol = MarkovStragglerPolicy.from_stationary(0.2, persistence=25.0)
+    assert pol.stationary_slow_fraction == pytest.approx(0.2)
+    stream = pol.stream(16, seed=3)
+    slow = np.mean([(stream.step() > 2.0).mean() for _ in range(4000)])
+    assert slow == pytest.approx(0.2, abs=0.04)
+    with pytest.raises(ValueError):
+        MarkovStragglerPolicy(onset=0.5, slow_factor=0.5)
+
+
+def test_elastic_drill_end_to_end(tmp_path):
+    """Device-death drill through the real launcher: a DP slice dies, the
+    masks flag unrecoverable steps, the mesh shrinks, the checkpoint is
+    restored under the survivor shardings, and training finishes."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train",
+         "--arch", "glm4-9b", "--smoke", "--steps", "20", "--batch", "8",
+         "--seq", "16", "--microbatches", "4", "--mesh-model", "4",
+         "--gradient-coding", "cyclic", "--gc-stragglers", "1",
+         "--ckpt-dir", str(tmp_path), "--ckpt-every", "5",
+         "--kill-at", "12", "--detect-steps", "2", "--log-every", "5"],
+        capture_output=True, text=True, timeout=420, env=env, cwd=REPO,
+    )
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    assert "elastic recovery" in out.stdout
+    assert "re-meshed 2->1 DP" in out.stdout
+    assert "resumed from checkpoint step 10" in out.stdout
+    assert "skipped=2" in out.stdout

@@ -61,6 +61,39 @@ def test_checkpoint_async(tmp_path, tree):
     assert latest_step(str(tmp_path)) == 42
 
 
+def test_gc_ignores_incomplete_and_sweeps_tmp(tmp_path, tree):
+    """Completeness is the manifest: a step dir without one must not count
+    toward ``keep`` (it would shadow real checkpoints out of retention) and
+    is swept, along with orphaned .tmp staging dirs."""
+    for s in (5, 10, 15):
+        save_checkpoint(str(tmp_path), s, tree)
+    os.makedirs(tmp_path / "step_00000020")  # crash before manifest
+    (tmp_path / "step_00000020" / "leaf-00000.npy").write_bytes(b"partial")
+    os.makedirs(tmp_path / ".tmp-7-0")
+    dropped = gc_checkpoints(str(tmp_path), keep=2)
+    assert dropped == [5]
+    left = sorted(os.listdir(tmp_path))
+    assert left == ["step_00000010", "step_00000015"]
+    assert latest_step(str(tmp_path)) == 15
+
+
+def test_async_save_error_reraised(tmp_path, tree, monkeypatch):
+    """A failed background save must surface from wait_for_saves, not
+    masquerade as a completed checkpoint."""
+    import repro.runtime.checkpoint as ck
+
+    def boom(*a, **kw):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(ck, "_write", boom)
+    save_checkpoint(str(tmp_path), 9, tree, blocking=False)
+    with pytest.raises(OSError, match="disk full"):
+        wait_for_saves()
+    monkeypatch.undo()
+    wait_for_saves()  # queue fully drained, no stale error re-raised
+    assert latest_step(str(tmp_path)) is None
+
+
 def test_checkpoint_shape_mismatch_raises(tmp_path, tree):
     save_checkpoint(str(tmp_path), 1, tree)
     bad = dict(tree)

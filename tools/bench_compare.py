@@ -17,6 +17,10 @@ in place), then diffs the fresh artifacts against the committed baselines:
       - adaptive:   adaptive <= static per cell, engines bit-identical,
                     batch-vs-algorithm1 speedup above the quick floor;
       - kernels:    every (kernel, shape) has both interpret + off rows;
+      - train:      coded tokens/sec above uncoded in every straggler cell,
+                    coded p99 below uncoded at the violent (slow >= 10)
+                    cells, the known-rates oracle bounds both arms, and
+                    every real-jit fidelity row passed;
   * upload: the fresh encode-kernel rows (``gaussian_encode``) are merged
     into the committed ``reports/bench/kernels.json`` so the new kernel's
     numbers ride along without hand-editing (other rows untouched);
@@ -29,7 +33,8 @@ in place), then diffs the fresh artifacts against the committed baselines:
     of the freshly measured best at the same cell (near-tie flips are fine;
     a committed winner that is now 2x off is a stale table).
     ``--autotune-only`` runs just that re-measure + check (the CI
-    autotune-consistency job).
+    autotune-consistency job); ``--train-only`` runs just the quick train
+    bench + its gate (the CI coded-training job).
 
 Exit code 0 = baselines healthy; 1 = a check failed (printed).
 """
@@ -47,9 +52,14 @@ sys.path.insert(0, os.path.join(REPO, "src"))
 from repro.kernels.cost import MODEL_ERROR_BOUND  # noqa: E402
 
 BASELINE_DIR = os.path.join(REPO, "reports", "bench")
-BLOCKS = "kernels,decode,streaming,adaptive,serve"
+BLOCKS = "kernels,decode,streaming,adaptive,serve,train"
 FILES = ["kernels", "BENCH_decode", "BENCH_streaming", "BENCH_adaptive",
-         "BENCH_serve"]
+         "BENCH_serve", "BENCH_train"]
+TRAIN_P99_SLOW = 10.0  # p99 gate applies at cells this violent or worse
+#                        (at the paper's 3x tier an onset step necessarily
+#                        costs ~2x a slow step, and onsets are p99-frequent,
+#                        so no causal policy can win the 3x tail; see
+#                        benchmarks/train_bench.py)
 ADAPTIVE_QUICK_SPEEDUP = 2.5   # matches benchmarks/adaptive_bench.py
 DECODE_MIN_ADVANTAGE = 1.0     # cached decode at least matches the SVD path
 STREAMING_MIN_ADVANTAGE = 1.0  # residual decode at least matches terminal
@@ -158,6 +168,55 @@ def check_serve(fresh: list[dict]) -> None:
                     fail(f"serve: {coded} goodput not above uncoded in {key}")
 
 
+def check_train(fresh: list[dict]) -> None:
+    """The train bench's acceptance relations (ISSUE 7), re-checked on the
+    fresh quick run — all scale-free, so quick mode only shrinks the step
+    count, not the relations:
+
+      * every injection cell carries all three policy arms;
+      * coded tokens/sec above uncoded wherever stragglers are injected;
+      * coded p99 step time below uncoded at the violent cells
+        (slow_factor >= TRAIN_P99_SLOW);
+      * the known-rates oracle bounds both arms (tokens/sec from above,
+        p99 from below) — it shares the cost model, so a violated bound
+        means the adaptive arm or the model itself regressed;
+      * every real-jit fidelity row (exact recovery, unrecoverable-mask
+        skip, compressed convergence) passed."""
+    eps = 1e-9
+    cells: dict[tuple, dict] = {}
+    fidelity = []
+    for r in fresh:
+        if r.get("bench") == "train_fidelity":
+            fidelity.append(r)
+        elif r.get("bench") == "train_coded":
+            cells.setdefault((r["onset"], r["slow_factor"]), {})[r["policy"]] = r
+    if not cells:
+        fail("train: no train_coded rows in the fresh run")
+    for key, pols in cells.items():
+        if not {"uncoded", "coded", "oracle"} <= set(pols):
+            fail(f"train: cell {key} missing a policy arm (have {sorted(pols)})")
+            continue
+        un, co, orc = pols["uncoded"], pols["coded"], pols["oracle"]
+        if orc["tokens_per_sec"] < max(un["tokens_per_sec"],
+                                       co["tokens_per_sec"]) - eps:
+            fail(f"train: oracle tokens/sec not an upper bound in {key}")
+        if orc["p99_step"] > min(un["p99_step"], co["p99_step"]) + eps:
+            fail(f"train: oracle p99 not a lower bound in {key}")
+        if key[0] > 0 and co["tokens_per_sec"] <= un["tokens_per_sec"]:
+            fail(f"train: coded tokens/sec not above uncoded in {key} "
+                 f"({co['tokens_per_sec']:.1f} <= {un['tokens_per_sec']:.1f})")
+        if key[0] > 0 and key[1] >= TRAIN_P99_SLOW \
+                and co["p99_step"] >= un["p99_step"]:
+            fail(f"train: coded p99 not below uncoded in {key} "
+                 f"({co['p99_step']:.2f} >= {un['p99_step']:.2f})")
+    if not fidelity:
+        fail("train: no fidelity rows in the fresh run")
+    for r in fidelity:
+        if not r.get("passed", False):
+            fail(f"train: fidelity check failed: {r.get('check')} "
+                 f"({r.get('note')})")
+
+
 def check_kernels(fresh: list[dict]) -> None:
     seen: dict[tuple, set] = {}
     for r in fresh:
@@ -248,6 +307,9 @@ def main() -> int:
                     help="re-measure the quick autotune grid into the scratch "
                          "dir and run only the autotune consistency checks "
                          "(the CI autotune job)")
+    ap.add_argument("--train-only", action="store_true",
+                    help="run only the quick train bench into the scratch dir "
+                         "and its check_train gate (the CI coded-training job)")
     args = ap.parse_args()
     scratch = os.path.abspath(args.scratch)
     if os.path.realpath(scratch) == os.path.realpath(BASELINE_DIR):
@@ -273,6 +335,25 @@ def main() -> int:
             return 1
         print("\nautotune consistency checks passed")
         return 0
+    if args.train_only:
+        if not args.skip_run:
+            cmd = [sys.executable, "-m", "benchmarks.run", "--quick",
+                   "--only", "train"]
+            print("+", " ".join(cmd), f"(BENCH_REPORT_DIR={scratch})")
+            proc = subprocess.run(cmd, cwd=REPO, env=env)
+            if proc.returncode != 0:
+                fail(f"quick train bench exited {proc.returncode}")
+        baseline = load(BASELINE_DIR, "BENCH_train")
+        fresh = load(scratch, "BENCH_train")
+        if baseline is not None and fresh is not None:
+            check_schema("BENCH_train", baseline, fresh)
+        if fresh is not None:
+            check_train(fresh)
+        if _failures:
+            print(f"\n{len(_failures)} train check(s) failed")
+            return 1
+        print("\ntrain baseline checks passed")
+        return 0
     if not args.skip_run:
         cmd = [sys.executable, "-m", "benchmarks.run", "--quick", "--only", BLOCKS]
         print("+", " ".join(cmd), f"(BENCH_REPORT_DIR={scratch})")
@@ -295,6 +376,8 @@ def main() -> int:
         check_adaptive(fresh_by_name["BENCH_adaptive"])
     if fresh_by_name.get("BENCH_serve"):
         check_serve(fresh_by_name["BENCH_serve"])
+    if fresh_by_name.get("BENCH_train"):
+        check_train(fresh_by_name["BENCH_train"])
     if fresh_by_name.get("kernels"):
         check_kernels(fresh_by_name["kernels"])
         if not _failures:

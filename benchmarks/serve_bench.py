@@ -1,48 +1,61 @@
-"""Traffic-scale coded serving -> BENCH_serve.json (DESIGN.md §10).
+"""Traffic-scale coded serving -> BENCH_serve.json (DESIGN.md §10/§13).
 
-The first benchmark that makes "requests per second under stragglers" a
+The benchmark that makes "requests per second under stragglers" a
 first-class quantity: open-loop arrival traces (Poisson and bursty MMPP)
 with per-request token SLOs are driven through the model-time serving
-simulator (``serve.scheduler.simulate_serve`` — the same TraceScheduler,
-ParityController, and DeadlineAwareParity objects the live engine runs),
-under per-shard Markov straggler injection, for three head policies:
+simulator — since PR 8 the TRIAL-BATCHED mirror
+(``serve.scheduler.simulate_serve_batch``), which runs every injection
+seed in lockstep over vectorized shard draws and is bit-identical per
+trial to the scalar ``simulate_serve`` loop.  That identity is not
+assumed: every cell re-proves it on a prefix trace and emits the verdict
+as a ``bit_identical`` column that ``tools/bench_compare.py`` gates on.
 
-  uncoded  — TP head with no parity: every step waits for the slowest of
-             all 16 shards;
-  fixed    — parity budget 4, dropped every step (the PR-1 serving mode);
-  adaptive — DeadlineAwareParity: per-step parity level from the straggler
-             posterior AND the tightest request's SLO slack, plus the
-             posterior-saturation parity top-up (budget raised to at most
-             8 via on-device re-encode, DESIGN.md §9).
+Two row families:
 
-Reported per cell (trace × straggler-onset), aggregated over
-``N_SEEDS`` independent injection realizations on the SAME trace:
-p50/p95/p99 per-token latency, goodput (SLO-met tokens per model-time
-unit), throughput, SLO attainment, rejected fraction, top-up count.
+  serve_traffic  — the PR-5 grid, unchanged semantics: trace kind ×
+                   straggler-injection cell × head policy (uncoded /
+                   fixed parity-4 / adaptive DeadlineAwareParity with
+                   posterior top-up), single SLO class, no prefill.
+  serve_occupancy — the PR-8 sweep: decode slots 4/8/16 with the arrival
+                   rate scaled proportionally (constant utilization), a
+                   two-class multi-tenant trace with prompt prefill under
+                   WFQ admission and per-tenant parity escalation
+                   (TenantDeadlineParity).  Goodput must scale with
+                   occupancy, and no SLO class may starve — both gated.
 
-Acceptance anchors (ISSUE 5):
-  * mean SLO attainment of adaptive >= fixed in EVERY cell (asserted) —
-    healthy cells tie at ~1.0, light-straggler cells are near-ties decided
-    by the masked-decode overhead adaptive avoids, and the heavy cells are
-    decided structurally: >4 persistently slow shards saturate fixed's
-    budget forever while adaptive tops up past them;
+Reported per cell, aggregated over ``n_seeds`` independent injection
+realizations on the SAME trace: p50/p95/p99 per-token latency, goodput
+(SLO-met tokens per model-time unit), throughput, SLO attainment,
+rejected fraction, top-up count, mean decode occupancy, per-class
+attainment/worst-wait, and the worst-class served fraction.
+
+Acceptance anchors (ISSUE 5 + ISSUE 8):
+  * mean SLO attainment of adaptive >= fixed in EVERY traffic cell;
   * coded (fixed AND adaptive) beats uncoded on goodput in every
-    straggler-injection cell (asserted) — the paper's robustness claim,
-    restated as serving goodput.
+    straggler-injection traffic cell — the paper's robustness claim,
+    restated as serving goodput;
+  * the batched engine is bit-identical to the scalar loop in every cell;
+  * goodput grows monotonically with decode occupancy (slots sweep);
+  * no SLO class starves in the CODED arms: fixed and adaptive keep a
+    positive served fraction for every class in every occupancy cell
+    (uncoded legitimately starves the tight class at violent injection —
+    its 50x step estimate makes that backlog infeasible — which is the
+    pathology the coded arms are measured against).
 
-Per-seed attainment in the light cells is noisy (a single 50x spike can
-flip a request); the asserted relation is on the per-cell mean, with the
-per-policy spread recorded alongside.
+Full mode sizes each cell at >= 1e5 simulated requests
+(``n_requests * n_seeds``); quick mode shrinks the trace, never the
+relations.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.common import emit
-from repro.serve.loadgen import bursty_trace, poisson_trace
+from repro.serve.loadgen import SLOClass, bursty_trace, poisson_trace
 from repro.serve.scheduler import (
     StragglerInjection,
     simulate_serve,
+    simulate_serve_batch,
     weighted_percentile,
 )
 
@@ -54,79 +67,181 @@ TRACES = ["poisson", "bursty"]
 CELLS = [(0.0, 0.0), (0.001, 50.0), (0.002, 50.0), (0.004, 50.0), (0.004, 4.0)]
 PERSISTENCE = 150.0  # mean slow-regime length (steps)
 POLICIES = ["uncoded", "fixed", "adaptive"]
-RATE = 0.22  # requests per model-time unit (~0.55 util)
+RATE = 0.22  # requests per model-time unit (~0.55 util at 8 slots)
 N_SHARDS, PARITY, PARITY_MAX = 16, 4, 8
 N_SLOTS = 8
 TRACE_SEED = 3
 INJ_SEED0 = 11
+# occupancy sweep: decode slots with the offered rate scaled to hold
+# utilization constant, so goodput must track capacity
+SWEEP_SLOTS = [4, 8, 16]
+SWEEP_CELL = (0.002, 50.0)  # the middle violent tier
+SWEEP_CLASSES = (
+    SLOClass(
+        name="prem",
+        weight=3.0,
+        slo_factor=6.0,
+        queue_grace=40.0,
+        share=0.3,
+        escalate_steps=16.0,
+    ),
+    SLOClass(
+        name="std",
+        weight=1.0,
+        slo_factor=3.0,
+        queue_grace=20.0,
+        share=0.7,
+        escalate_steps=4.0,
+    ),
+)
+SWEEP_PREFILL = 12.0
+
+_BIT_FIELDS = (
+    "t_complete",
+    "t_admit",
+    "slo_met",
+    "rejected",
+    "step_times",
+    "step_tokens",
+    "parity_levels",
+    "step_prefill",
+    "tenant",
+    "class_attainment",
+    "class_max_wait",
+)
 
 
-def _cell(trace, onset: float, slow: float, policy: str, n_seeds: int) -> dict:
-    inj = (
-        StragglerInjection(onset=onset, slow_factor=slow, persistence=PERSISTENCE)
-        if onset > 0.0
-        else None
+def _inj(onset: float, slow: float) -> StragglerInjection | None:
+    if onset <= 0.0:
+        return None
+    return StragglerInjection(onset=onset, slow_factor=slow, persistence=PERSISTENCE)
+
+
+def _bit_identical(trace, policy: str, inj, **kw) -> bool:
+    """Re-prove, on this cell's prefix trace, that the trial-batched engine
+    reproduces the scalar loop bit for bit (trial 0 suffices: all trials
+    share the code path and differ only in seed)."""
+    batch = simulate_serve_batch(
+        trace,
+        policy,
+        n_trials=1,
+        n_shards=N_SHARDS,
+        parity=PARITY,
+        parity_max=PARITY_MAX,
+        injection=inj,
+        seed0=INJ_SEED0,
+        **kw,
+    )[0]
+    ref = simulate_serve(
+        trace,
+        policy,
+        n_shards=N_SHARDS,
+        parity=PARITY,
+        parity_max=PARITY_MAX,
+        injection=inj,
+        seed=INJ_SEED0,
+        **kw,
     )
-    atts, goods, thrus, rejs, topups = [], [], [], [], []
-    steps_all, tokens_all = [], []
-    for s in range(n_seeds):
-        r = simulate_serve(
-            trace,
-            policy,
-            n_shards=N_SHARDS,
-            parity=PARITY,
-            parity_max=PARITY_MAX,
-            n_slots=N_SLOTS,
-            injection=inj,
-            seed=INJ_SEED0 + s,
-        )
-        atts.append(r.attainment)
-        goods.append(r.goodput)
-        thrus.append(r.throughput)
-        rejs.append(float(r.rejected.mean()))
-        topups.append(r.topups)
-        steps_all.append(r.step_times)
-        tokens_all.append(r.step_tokens)
+    for f in _BIT_FIELDS:
+        if not np.array_equal(getattr(ref, f), getattr(batch, f), equal_nan=True):
+            return False
+    return (ref.topups, ref.makespan, ref.goodput) == (
+        batch.topups,
+        batch.makespan,
+        batch.goodput,
+    )
+
+
+def _cell(
+    trace,
+    prefix_trace,
+    onset: float,
+    slow: float,
+    policy: str,
+    n_seeds: int,
+    *,
+    bench: str = "serve_traffic",
+    n_slots: int = N_SLOTS,
+    rate: float = RATE,
+    **kw,
+) -> dict:
+    inj = _inj(onset, slow)
+    results = simulate_serve_batch(
+        trace,
+        policy,
+        n_trials=n_seeds,
+        n_shards=N_SHARDS,
+        parity=PARITY,
+        parity_max=PARITY_MAX,
+        n_slots=n_slots,
+        injection=inj,
+        seed0=INJ_SEED0,
+        **kw,
+    )
     # pooled token-latency percentiles across the seeds' steps
-    st = np.concatenate(steps_all)
-    tk = np.concatenate(tokens_all)
+    st = np.concatenate([r.step_times for r in results])
+    tk = np.concatenate([r.step_tokens for r in results])
 
     def pct(q):
         return weighted_percentile(st, tk, q)
 
+    served_fracs = []  # worst-class served fraction, per seed
+    for r in results:
+        admitted = np.isfinite(r.t_admit)
+        fracs = [
+            float(admitted[r.tenant == c].mean())
+            for c in range(len(r.class_attainment))
+        ]
+        served_fracs.append(min(fracs))
     return {
-        "bench": "serve_traffic",
+        "bench": bench,
         "trace": trace.kind,
         "onset": onset,
         "slow_factor": slow if onset > 0 else 0.0,
         "policy": policy,
         "n_requests": trace.n_requests,
         "n_seeds": n_seeds,
-        "offered_load": trace.offered_load(N_SLOTS, 1.05),
-        "attainment": float(np.mean(atts)),
-        "attainment_min": float(np.min(atts)),
-        "attainment_max": float(np.max(atts)),
-        "goodput": float(np.mean(goods)),
-        "throughput": float(np.mean(thrus)),
+        "n_slots": n_slots,
+        "rate": rate,
+        "offered_load": trace.offered_load(n_slots, 1.05),
+        "attainment": float(np.mean([r.attainment for r in results])),
+        "attainment_min": float(np.min([r.attainment for r in results])),
+        "attainment_max": float(np.max([r.attainment for r in results])),
+        "goodput": float(np.mean([r.goodput for r in results])),
+        "throughput": float(np.mean([r.throughput for r in results])),
+        "occupancy": float(np.mean([r.occupancy for r in results])),
         "p50_token_latency": pct(50),
         "p95_token_latency": pct(95),
         "p99_token_latency": pct(99),
-        "rejected_frac": float(np.mean(rejs)),
-        "mean_topups": float(np.mean(topups)),
+        "rejected_frac": float(np.mean([r.rejected.mean() for r in results])),
+        "mean_topups": float(np.mean([r.topups for r in results])),
+        "class_attainment": [
+            float(a) for a in np.mean([r.class_attainment for r in results], 0)
+        ],
+        "class_max_wait": [
+            float(w) for w in np.max([r.class_max_wait for r in results], 0)
+        ],
+        "min_class_served_frac": float(np.min(served_fracs)),
+        "bit_identical": _bit_identical(
+            prefix_trace, policy, inj, n_slots=n_slots, **kw
+        ),
     }
 
 
 def run(quick: bool = False) -> None:
-    n_requests = 120 if quick else 300
-    n_seeds = 3 if quick else 6
+    # full mode: n_requests * n_seeds >= 1e5 simulated requests per cell
+    n_requests = 400 if quick else 40_000
+    n_prefix = 200 if quick else 400  # bit-identity proof trace
+    n_seeds = 3
     rows = []
     for kind in TRACES:
         mk = poisson_trace if kind == "poisson" else bursty_trace
         trace = mk(RATE, n_requests, seed=TRACE_SEED)
+        prefix = mk(RATE, n_prefix, seed=TRACE_SEED)
         for onset, slow in CELLS:
             cell = {}
             for policy in POLICIES:
-                row = _cell(trace, onset, slow, policy, n_seeds)
+                row = _cell(trace, prefix, onset, slow, policy, n_seeds)
                 cell[policy] = row
                 rows.append(row)
             # ---- acceptance relations, per cell -------------------------
@@ -142,18 +257,74 @@ def run(quick: bool = False) -> None:
                         f"{coded} goodput not above uncoded in "
                         f"({kind}, onset={onset}, slow={slow})"
                     )
+    # ---- occupancy sweep: multi-tenant WFQ + prefill, slots 4/8/16 ------
+    onset, slow = SWEEP_CELL
+    by_policy: dict[str, list[dict]] = {p: [] for p in POLICIES}
+    for n_slots in SWEEP_SLOTS:
+        rate = RATE / N_SLOTS * n_slots
+        trace = bursty_trace(
+            rate,
+            n_requests,
+            seed=TRACE_SEED,
+            classes=SWEEP_CLASSES,
+            mean_prefill=SWEEP_PREFILL,
+        )
+        prefix = bursty_trace(
+            rate,
+            n_prefix,
+            seed=TRACE_SEED,
+            classes=SWEEP_CLASSES,
+            mean_prefill=SWEEP_PREFILL,
+        )
+        for policy in POLICIES:
+            row = _cell(
+                trace,
+                prefix,
+                onset,
+                slow,
+                policy,
+                n_seeds,
+                bench="serve_occupancy",
+                n_slots=n_slots,
+                rate=rate,
+                tenant_parity=(policy == "adaptive"),
+            )
+            by_policy[policy].append(row)
+            rows.append(row)
+    for policy, prows in by_policy.items():
+        for lo, hi in zip(prows, prows[1:]):
+            assert hi["goodput"] > lo["goodput"], (
+                f"goodput not monotone in occupancy for {policy}: "
+                f"{lo['n_slots']} slots -> {lo['goodput']:.3f}, "
+                f"{hi['n_slots']} slots -> {hi['goodput']:.3f}"
+            )
+        if policy == "uncoded":
+            # uncoded's 50x step estimate makes the tight class's whole
+            # backlog infeasible — starvation HERE is the pathology the
+            # coded arms are measured against, not a fairness bug
+            continue
+        for r in prows:
+            assert r["min_class_served_frac"] > 0.0, (
+                f"an SLO class starved under WFQ ({policy}, "
+                f"{r['n_slots']} slots)"
+            )
+    assert all(r["bit_identical"] for r in rows), "batch sim diverged from scalar"
     keys = [
+        "bench",
         "trace",
         "onset",
         "slow_factor",
         "policy",
+        "n_slots",
+        "occupancy",
         "attainment",
         "goodput",
         "p50_token_latency",
-        "p95_token_latency",
         "p99_token_latency",
         "rejected_frac",
         "mean_topups",
+        "min_class_served_frac",
+        "bit_identical",
     ]
     emit("BENCH_serve", rows, keys=keys)
 

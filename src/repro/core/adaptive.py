@@ -74,6 +74,7 @@ __all__ = [
     "padded_allocation",
     "ParityController",
     "DeadlineAwareParity",
+    "TenantDeadlineParity",
     "ReplicationController",
 ]
 
@@ -1827,14 +1828,70 @@ class DeadlineAwareParity:
         exposure = max_parity / max(self.controller.n_blocks, 1)
         return self._onset_rate * exposure * self._spike < self.relax_overhead
 
-    def level(self, max_parity: int, slack_steps: float) -> int:
-        """Parity level for this step given the tightest request's slack
-        (in units of estimated steps; +inf = no deadline pressure)."""
+    def _level_one(
+        self, max_parity: int, slack_steps: float, escalate_steps: float
+    ) -> int:
+        """One slack → parity conversion at a given escalation threshold.
+        Float-identical to the pre-tenant ``level`` when ``escalate_steps``
+        is ``self.escalate_steps`` — the per-tenant subclass reuses this per
+        SLO class."""
         base = self.controller.parity_level(max_parity)
         if not np.isfinite(slack_steps):
             return base
-        urgency = min(max(1.0 - slack_steps / self.escalate_steps, 0.0), 1.0)
+        urgency = min(max(1.0 - slack_steps / escalate_steps, 0.0), 1.0)
         floor = int(np.ceil(urgency * max_parity))
         if base > 0 or not self.calm or not self.relax_worthwhile(max_parity):
             floor = max_parity
         return int(min(max_parity, max(base, floor)))
+
+    def level(self, max_parity: int, slack_steps: float) -> int:
+        """Parity level for this step given the tightest request's slack
+        (in units of estimated steps; +inf = no deadline pressure)."""
+        return self._level_one(max_parity, slack_steps, self.escalate_steps)
+
+
+class TenantDeadlineParity(DeadlineAwareParity):
+    """Per-tenant slack → parity: each SLO class converts ITS OWN tightest
+    slack into a parity demand at its own escalation threshold, and the
+    step runs at the maximum over classes (DESIGN.md §13).
+
+    Rationale: a premium class with ``escalate_steps=16`` starts hedging
+    while a best-effort class with ``escalate_steps=4`` is still relaxed —
+    the global policy would let the batch-wide min slack (usually the
+    best-effort backlog) dictate parity for everyone, either over-paying
+    decode overhead for tenants that do not need it or reacting too late
+    for tenants that do.  Evidence state (onset rate, spike magnitude,
+    calm window) stays GLOBAL — stragglers are a cluster property, not a
+    tenant property — so ``observe`` is inherited unchanged.
+
+    With a single class whose ``escalate_steps`` equals the policy's own,
+    ``level_classes([s])`` is EXACTLY ``DeadlineAwareParity.level(s)`` (the
+    degradation property, asserted in tests/test_serve_batch.py)."""
+
+    def __init__(self, controller: ParityController, classes=(), **kw):
+        super().__init__(controller, **kw)
+        esc = [float(getattr(c, "escalate_steps", c)) for c in classes]
+        if not esc:
+            esc = [self.escalate_steps]
+        if any(e <= 0 for e in esc):
+            raise ValueError("class escalate_steps must be positive")
+        self.class_escalate = tuple(esc)
+
+    def level_classes(self, max_parity: int, slack_steps) -> int:
+        """Parity for this step: max over per-class slack conversions.
+        ``slack_steps[c]`` is class c's tightest admitted slack (+inf when
+        the class has nothing admitted)."""
+        slacks = np.asarray(slack_steps, np.float64)
+        if len(slacks) != len(self.class_escalate):
+            raise ValueError("slack vector length != number of classes")
+        return max(
+            self._level_one(max_parity, float(s), e)
+            for s, e in zip(slacks, self.class_escalate)
+        )
+
+    def level(self, max_parity: int, slack_steps) -> int:
+        """Accept either the global scalar slack (degraded mode) or the
+        per-class vector."""
+        if np.ndim(slack_steps) == 0:
+            return super().level(max_parity, float(slack_steps))
+        return self.level_classes(max_parity, slack_steps)

@@ -72,6 +72,21 @@ def main() -> None:
                          "parity level from SLO slack (DESIGN.md §10's "
                          "DeadlineAwareParity) rather than straggler "
                          "history alone")
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="trace mode: SLO classes (DESIGN.md §13) — 1 is "
+                         "the single default class; N>1 splits traffic "
+                         "into N weighted-fair-queued tenants with "
+                         "geometrically decaying weights and tightening "
+                         "deadline factors")
+    ap.add_argument("--tenant-parity", action="store_true",
+                    help="with --deadline-parity and --tenants > 1: "
+                         "per-class slack -> parity escalation "
+                         "(TenantDeadlineParity) instead of the global "
+                         "min-slack rule")
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="trace mode: prompt tokens the engine may prefill "
+                         "per step (prefill/decode disaggregation); "
+                         "default refills every free slot")
     ap.add_argument("--seed", type=int, default=0,
                     help="PRNG seed (params, prompts, straggler draws)")
     ap.add_argument("--dry-run", action="store_true",
@@ -83,6 +98,10 @@ def main() -> None:
     if args.deadline_parity and not (args.adaptive_parity and args.trace != "none"):
         ap.error("--deadline-parity requires --adaptive-parity and --trace "
                  "(SLO slack only exists under a deadline-bearing trace)")
+    if args.tenants < 1:
+        ap.error("--tenants must be >= 1")
+    if args.tenant_parity and not (args.deadline_parity and args.tenants > 1):
+        ap.error("--tenant-parity requires --deadline-parity and --tenants > 1")
 
     from repro.configs import get_config
     from repro.models.config import coded_blocks
@@ -108,7 +127,9 @@ def main() -> None:
         if args.trace != "none":
             print(f"  traffic: trace={args.trace} rate={args.rate}/s "
                   f"slo_factor={args.slo_factor} t_token_est={args.t_token_est}s "
-                  f"deadline_parity={args.deadline_parity}")
+                  f"deadline_parity={args.deadline_parity} "
+                  f"tenants={args.tenants} tenant_parity={args.tenant_parity} "
+                  f"prefill_budget={args.prefill_budget}")
         return
 
     import jax
@@ -155,13 +176,29 @@ def main() -> None:
 
     if args.trace != "none":
         # ---- trace-driven mode: open-loop arrivals + deadlines ----------
-        from repro.core.adaptive import DeadlineAwareParity
-        from repro.serve import TraceScheduler, bursty_trace, poisson_trace
+        from repro.core.adaptive import DeadlineAwareParity, TenantDeadlineParity
+        from repro.serve import (
+            SLOClass,
+            TraceScheduler,
+            bursty_trace,
+            poisson_trace,
+        )
 
+        classes = None
+        if args.tenants > 1:
+            # premium tenants: higher WFQ weight, tighter per-token SLO,
+            # slacker escalation (they start hedging earlier)
+            classes = tuple(
+                SLOClass(name=f"t{c}", weight=2.0 ** (args.tenants - 1 - c),
+                         slo_factor=args.slo_factor * (1.0 + 0.5 * c),
+                         share=1.0, escalate_steps=8.0 * (1.0 + c))
+                for c in range(args.tenants)
+            )
         mk = poisson_trace if args.trace == "poisson" else bursty_trace
         trace = mk(args.rate, args.requests, seed=args.seed,
                    mean_tokens=args.max_new, max_tokens=args.max_new,
-                   t_token=args.t_token_est, slo_factor=args.slo_factor)
+                   t_token=args.t_token_est, slo_factor=args.slo_factor,
+                   classes=classes)
         payloads = [
             Request(uid=i,
                     prompt=rng.integers(0, cfg.vocab, args.prompt_len).astype(np.int32),
@@ -170,14 +207,18 @@ def main() -> None:
         ]
         sched = TraceScheduler(trace, args.slots, t_step_init=args.t_token_est,
                                payloads=payloads)
-        policy = (DeadlineAwareParity(controller)
-                  if args.deadline_parity and controller is not None else None)
+        policy = None
+        if args.deadline_parity and controller is not None:
+            policy = (TenantDeadlineParity(controller, classes=trace.classes)
+                      if args.tenant_parity
+                      else DeadlineAwareParity(controller))
         t0 = time.monotonic()
         clock = lambda: time.monotonic() - t0  # noqa: E731
         eng = ServeEngine(model, params, n_slots=args.slots, s_max=args.s_max,
                           mask_fn=mask_fn, latency_fn=latency_fn,
                           parity_controller=controller, parity_policy=policy,
-                          scheduler=sched, clock=clock)
+                          scheduler=sched, clock=clock,
+                          prefill_budget=args.prefill_budget)
         while not sched.finished:
             if eng.step() == 0:
                 nxt = sched.next_arrival()
@@ -193,6 +234,12 @@ def main() -> None:
               f"rejected {int(res['rejected'].sum())}  "
               f"est_step {sched.est_step_time * 1e3:.1f} ms  "
               f"deadline_parity={policy is not None}")
+        if args.tenants > 1:
+            for c, cls in enumerate(trace.classes):
+                sel = res["tenant"] == c
+                att = res["slo_met"][sel].mean() if sel.any() else 1.0
+                print(f"  class {cls.name}: weight={cls.weight:g} "
+                      f"n={int(sel.sum())} attainment {att:.1%}")
         return
 
     eng = ServeEngine(model, params, n_slots=args.slots, s_max=args.s_max,

@@ -1,6 +1,7 @@
 from repro.serve.engine import Request, ServeEngine  # noqa: F401
 from repro.serve.loadgen import (  # noqa: F401
     ArrivalTrace,
+    SLOClass,
     bursty_trace,
     poisson_trace,
     replay_trace,
@@ -12,4 +13,5 @@ from repro.serve.scheduler import (  # noqa: F401
     StragglerInjection,
     TraceScheduler,
     simulate_serve,
+    simulate_serve_batch,
 )

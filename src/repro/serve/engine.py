@@ -104,6 +104,7 @@ class ServeEngine:
         scheduler: "TraceScheduler | None" = None,
         parity_policy: "DeadlineAwareParity | None" = None,
         clock: Callable[[], float] | None = None,
+        prefill_budget: int | None = None,
     ):
         """``parity_topup`` allows the engine to RAISE the coded head's
         parity budget at runtime by up to that many blocks: when the
@@ -122,9 +123,17 @@ class ServeEngine:
         ``serve.scheduler.TraceScheduler`` (open-loop arrivals, deadlines,
         admission control); its request payloads must be ``Request``
         objects.  ``parity_policy`` replaces the raw ParityController level
-        with the deadline-aware rule (SLO slack from the scheduler);
-        ``clock`` supplies "now" (defaults to ``time.monotonic``; tests
-        inject a fake model-time clock).
+        with the deadline-aware rule (SLO slack from the scheduler; a
+        ``TenantDeadlineParity`` policy is fed the PER-CLASS slack vector
+        so each SLO class escalates at its own threshold); ``clock``
+        supplies "now" (defaults to ``time.monotonic``; tests inject a
+        fake model-time clock).
+
+        ``prefill_budget`` disaggregates prefill from decode in the
+        scheduler-driven refill: each step admits new requests only while
+        the prompt tokens prefilled this step stay under the budget (the
+        first admission always lands, so a long prompt cannot livelock).
+        ``None`` keeps the PR 5 behaviour of refilling every free slot.
 
         ``head_kernel_mode`` selects the coded head's kernel
         implementation: ``'auto'`` consults the autotune dispatch table
@@ -154,6 +163,7 @@ class ServeEngine:
         self._clock = clock
         self.parity_topup = parity_topup
         self.topup_patience = topup_patience
+        self.prefill_budget = prefill_budget
         self.encode_mode = encode_mode
         self.head_kernel_mode = head_kernel_mode
         self.parity_events: list[dict] = []
@@ -250,12 +260,41 @@ class ServeEngine:
         self.slots[slot] = req
         self._active[slot] = True
 
+    def _finish_slot(self, slot: int, req: Request, now: float | None) -> None:
+        """Retire a request and free its slot — THE one completion path
+        (prefill-completed, EOS, and budget-exhausted all land here, so
+        the slot is reusable the same step and can never double-retire)."""
+        if self.scheduler is not None and req.sched_idx is not None:
+            self.scheduler.on_finish(req.sched_idx, now)
+        self.completed.append(req)
+        self._active[slot] = False
+        self.slots[slot] = None
+
+    def _prefill_done(self, req: Request) -> bool:
+        """Did the prefill's own first token already end this request?
+        (1-token budget, or EOS as the very first output.)  Generalizes
+        the PR 5 one-token fix: ANY way a request can end at prefill must
+        free the slot before the next decode step, or that step would emit
+        past the budget / past EOS (regression-tested in
+        tests/test_serve_batch.py)."""
+        hit_eos = (
+            self.eos_token is not None
+            and req.out_tokens
+            and req.out_tokens[-1] == self.eos_token
+        )
+        return req.done or hit_eos
+
     def _refill(self, now: float | None = None) -> None:
         if self.scheduler is not None:
-            free = int(self.n_slots - self._active.sum())
-            if free <= 0:
-                return
-            for sreq in self.scheduler.admit(now, free):
+            prompt_spent = 0
+            while True:
+                free = int(self.n_slots - self._active.sum())
+                if free <= 0:
+                    return
+                admitted = self.scheduler.admit(now, 1)
+                if not admitted:
+                    return
+                sreq = admitted[0]
                 req = sreq.payload
                 if not isinstance(req, Request):
                     raise TypeError(
@@ -273,24 +312,36 @@ class ServeEngine:
                 req.deadline = sreq.deadline
                 slot = int(np.flatnonzero(~self._active)[0])
                 self._insert_slot(slot, req)
+                prompt_spent += len(req.prompt)
                 # the prefill already emitted this request's first token —
-                # which can COMPLETE a 1-token request: free its slot now,
-                # or the next decode step would emit past its budget.  The
-                # token is stamped with a FRESH clock read: the prefill
-                # (and its first-call jit compile) took real wall time, and
-                # a pre-prefill stamp would count deadline-expired requests
-                # as met
+                # which can COMPLETE the request (1-token budget, or EOS as
+                # the first output): free its slot now, or the next decode
+                # step would emit past its budget.  The token is stamped
+                # with a FRESH clock read: the prefill (and its first-call
+                # jit compile) took real wall time, and a pre-prefill stamp
+                # would count deadline-expired requests as met
                 t_tok = self._clock()
                 done = self.scheduler.on_token(sreq.idx, t_tok)
-                if done or req.done:
-                    self.scheduler.on_finish(sreq.idx, t_tok)
-                    self.completed.append(req)
-                    self._active[slot] = False
-                    self.slots[slot] = None
-            return
-        for s in range(self.n_slots):
-            if not self._active[s] and self.queue:
-                self._insert_slot(s, self.queue.popleft())
+                if done or self._prefill_done(req):
+                    self._finish_slot(slot, req, t_tok)
+                # prefill/decode disaggregation: stop admitting once this
+                # step's prompt-token budget is spent (the admission above
+                # always lands, so long prompts make progress)
+                if self.prefill_budget is not None and (
+                    prompt_spent >= self.prefill_budget
+                ):
+                    return
+        else:
+            for s in range(self.n_slots):
+                if not self._active[s] and self.queue:
+                    req = self.queue.popleft()
+                    self._insert_slot(s, req)
+                    # same seam as the scheduler path: a request whose
+                    # prefill token already satisfied it must not see a
+                    # decode step (max_new_tokens=1 double-emitted here
+                    # before the fix)
+                    if self._prefill_done(req):
+                        self._finish_slot(s, req, None)
 
     def _raise_parity(self) -> None:
         """Re-encode the coded head with ONE more parity block, on device.
@@ -384,12 +435,18 @@ class ServeEngine:
                 if self.parity_policy is not None:
                     # deadline-aware level: SLO slack (in estimated steps,
                     # +inf without a scheduler) escalates toward the full
-                    # budget; ample slack degrades to the posterior count
-                    slack = (
-                        self.scheduler.min_slack_steps(now)
-                        if self.scheduler is not None
-                        else np.inf
-                    )
+                    # budget; ample slack degrades to the posterior count.
+                    # A per-tenant policy gets the per-class slack vector —
+                    # each SLO class converts its own slack at its own
+                    # escalation threshold and the step runs at the max
+                    from repro.core.adaptive import TenantDeadlineParity
+
+                    if self.scheduler is None:
+                        slack: Any = np.inf
+                    elif isinstance(self.parity_policy, TenantDeadlineParity):
+                        slack = self.scheduler.class_slack_steps(now)
+                    else:
+                        slack = self.scheduler.min_slack_steps(now)
                     n_par = self.parity_policy.level(n_par, slack)
                 else:
                     n_par = self.parity_controller.parity_level(n_par)
@@ -406,6 +463,7 @@ class ServeEngine:
         )
         self._last_tok = toks_dev           # feeds next step, never leaves device
         toks = np.asarray(toks_dev)         # the ONE host transfer per step
+        t_done = None
         if self.scheduler is not None:
             t_done = self._clock()
             if self._fresh_jit:
@@ -426,12 +484,9 @@ class ServeEngine:
             if self.scheduler is not None and req.sched_idx is not None:
                 done_sched = self.scheduler.on_token(req.sched_idx, t_done)
             if req.done or hit_eos or done_sched:
-                if self.scheduler is not None and req.sched_idx is not None:
-                    # EOS can land before the token budget: force completion
-                    self.scheduler.on_finish(req.sched_idx, t_done)
-                self.completed.append(req)
-                self._active[s] = False
-                self.slots[s] = None
+                # EOS can land before the token budget: _finish_slot force-
+                # completes on the scheduler and frees the slot this step
+                self._finish_slot(s, req, t_done)
         return int(self._active.sum())
 
     def run(self, max_steps: int = 10_000) -> list[Request]:

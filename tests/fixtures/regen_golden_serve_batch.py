@@ -1,0 +1,88 @@
+"""Regenerate golden_serve_batch.json (run from repo root):
+
+    PYTHONPATH=src python tests/fixtures/regen_golden_serve_batch.py
+
+Commit the diff ONLY for an intentional continuous-batching behaviour
+change — the fixture pins a multi-tenant, prefill-bearing trace's
+per-trial, per-request completion times under the trial-batched engine
+with the per-tenant parity policy (DESIGN.md §13).  Because
+``simulate_serve_batch`` is bit-identical per trial to ``simulate_serve``
+(tests/test_serve_batch.py), this fixture pins BOTH engines at once."""
+import json
+import os
+
+import numpy as np
+
+from repro.serve.loadgen import SLOClass, bursty_trace
+from repro.serve.scheduler import StragglerInjection, simulate_serve_batch
+
+SPEC = {
+    "rate": 0.22,
+    "n_requests": 48,
+    "trace_seed": 7,
+    "mean_tokens": 24.0,
+    "max_tokens": 128,
+    "mean_prefill": 12.0,
+    "max_prefill": 64,
+    "policy": "adaptive",
+    "n_trials": 3,
+    "seed0": 9,
+    "tenant_parity": True,
+    "injection": {"onset": 0.002, "slow_factor": 50.0, "persistence": 150.0},
+    "classes": [
+        {"name": "prem", "weight": 3.0, "slo_factor": 6.0, "queue_grace": 40.0,
+         "share": 0.3, "escalate_steps": 16.0},
+        {"name": "std", "weight": 1.0, "slo_factor": 3.0, "queue_grace": 20.0,
+         "share": 0.7, "escalate_steps": 4.0},
+    ],
+}
+
+
+def build_trace():
+    classes = tuple(SLOClass(**c) for c in SPEC["classes"])
+    return bursty_trace(
+        SPEC["rate"],
+        SPEC["n_requests"],
+        seed=SPEC["trace_seed"],
+        mean_tokens=SPEC["mean_tokens"],
+        max_tokens=SPEC["max_tokens"],
+        classes=classes,
+        mean_prefill=SPEC["mean_prefill"],
+        max_prefill=SPEC["max_prefill"],
+    )
+
+
+def main() -> None:
+    results = simulate_serve_batch(
+        build_trace(),
+        SPEC["policy"],
+        n_trials=SPEC["n_trials"],
+        injection=StragglerInjection(**SPEC["injection"]),
+        seed0=SPEC["seed0"],
+        tenant_parity=SPEC["tenant_parity"],
+    )
+    out = dict(SPEC)
+    out["trials"] = [
+        {
+            "t_complete": [
+                round(float(t), 9) if np.isfinite(t) else -1.0
+                for t in r.t_complete
+            ],
+            "topups": int(r.topups),
+            "attainment": round(float(r.attainment), 9),
+            "class_attainment": [round(float(a), 9) for a in r.class_attainment],
+            "occupancy": round(float(r.occupancy), 9),
+            "prefill_tokens": int(r.step_prefill.sum()),
+        }
+        for r in results
+    ]
+    path = os.path.join(os.path.dirname(__file__), "golden_serve_batch.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {path}: " + ", ".join(
+        f"trial{i} att={t['attainment']}" for i, t in enumerate(out["trials"])
+    ))
+
+
+if __name__ == "__main__":
+    main()

@@ -21,6 +21,11 @@ in place), then diffs the fresh artifacts against the committed baselines:
                     coded p99 below uncoded at the violent (slow >= 10)
                     cells, the known-rates oracle bounds both arms, and
                     every real-jit fidelity row passed;
+      - serve:      trial-batched simulator bit-identical to the scalar
+                    loop in every cell, adaptive attainment >= fixed,
+                    coded goodput above uncoded under injection, goodput
+                    monotone in decode occupancy, and no SLO class
+                    starved under WFQ admission;
   * upload: the fresh encode-kernel rows (``gaussian_encode``) are merged
     into the committed ``reports/bench/kernels.json`` so the new kernel's
     numbers ride along without hand-editing (other rows untouched);
@@ -34,7 +39,8 @@ in place), then diffs the fresh artifacts against the committed baselines:
     a committed winner that is now 2x off is a stale table).
     ``--autotune-only`` runs just that re-measure + check (the CI
     autotune-consistency job); ``--train-only`` runs just the quick train
-    bench + its gate (the CI coded-training job).
+    bench + its gate (the CI coded-training job); ``--serve-only`` runs
+    just the quick serve bench + its gate (the CI serve-batch job).
 
 Exit code 0 = baselines healthy; 1 = a check failed (printed).
 """
@@ -145,12 +151,30 @@ def check_adaptive(fresh: list[dict]) -> None:
 
 
 def check_serve(fresh: list[dict]) -> None:
-    """The serve bench's acceptance relations, re-checked on the fresh run:
-    adaptive SLO attainment >= fixed per cell, and coded goodput above
-    uncoded in every straggler-injection cell (scale-free — quick mode
-    shrinks the trace, not the relations)."""
-    cells: dict[tuple, dict] = {}
+    """The serve bench's acceptance relations, re-checked on the fresh run
+    (all scale-free — quick mode shrinks the trace, not the relations):
+
+      * every cell's trial-batched run proved bit-identical to the scalar
+        simulator (the ``bit_identical`` column, DESIGN.md §13);
+      * traffic grid: adaptive SLO attainment >= fixed per cell, and coded
+        goodput above uncoded in every straggler-injection cell;
+      * occupancy sweep: goodput strictly monotone in decode slots per
+        policy (rate scales with slots, so capacity must show up as
+        goodput), and no SLO class starves under WFQ admission in the
+        CODED arms (uncoded starving the tight class at violent injection
+        is the measured pathology, not a fairness bug)."""
     for r in fresh:
+        if not r.get("bit_identical", False):
+            fail(f"serve: batched simulator not bit-identical to the scalar "
+                 f"loop in ({r.get('bench')}, {r.get('trace')}, "
+                 f"onset={r.get('onset')}, policy={r.get('policy')}, "
+                 f"slots={r.get('n_slots')})")
+    cells: dict[tuple, dict] = {}
+    sweep: dict[str, list[dict]] = {}
+    for r in fresh:
+        if r.get("bench") == "serve_occupancy":
+            sweep.setdefault(r["policy"], []).append(r)
+            continue
         cells.setdefault((r["trace"], r["onset"], r["slow_factor"]), {})[
             r["policy"]
         ] = r
@@ -166,6 +190,22 @@ def check_serve(fresh: list[dict]) -> None:
             for coded in ("fixed", "adaptive"):
                 if pols[coded]["goodput"] <= pols["uncoded"]["goodput"]:
                     fail(f"serve: {coded} goodput not above uncoded in {key}")
+    if not sweep:
+        fail("serve: no serve_occupancy sweep rows in the fresh run")
+    for policy, prows in sweep.items():
+        prows.sort(key=lambda r: r["n_slots"])
+        for lo, hi in zip(prows, prows[1:]):
+            if hi["goodput"] <= lo["goodput"]:
+                fail(f"serve: goodput not monotone in occupancy for {policy} "
+                     f"({lo['n_slots']} slots -> {lo['goodput']:.3f}, "
+                     f"{hi['n_slots']} slots -> {hi['goodput']:.3f})")
+        if policy == "uncoded":
+            continue  # uncoded starving the tight class IS the measured
+            #           pathology (serve_bench.py) — only coded arms gate
+        for r in prows:
+            if r.get("min_class_served_frac", 0.0) <= 0.0:
+                fail(f"serve: an SLO class starved under WFQ "
+                     f"({policy}, {r['n_slots']} slots)")
 
 
 def check_train(fresh: list[dict]) -> None:
@@ -310,6 +350,11 @@ def main() -> int:
     ap.add_argument("--train-only", action="store_true",
                     help="run only the quick train bench into the scratch dir "
                          "and its check_train gate (the CI coded-training job)")
+    ap.add_argument("--serve-only", action="store_true",
+                    help="run only the quick serve bench into the scratch dir "
+                         "and its check_serve gate — batched/scalar bit "
+                         "identity, goodput-vs-occupancy monotonicity, WFQ "
+                         "no-starvation (the CI serve-batch job)")
     args = ap.parse_args()
     scratch = os.path.abspath(args.scratch)
     if os.path.realpath(scratch) == os.path.realpath(BASELINE_DIR):
@@ -353,6 +398,25 @@ def main() -> int:
             print(f"\n{len(_failures)} train check(s) failed")
             return 1
         print("\ntrain baseline checks passed")
+        return 0
+    if args.serve_only:
+        if not args.skip_run:
+            cmd = [sys.executable, "-m", "benchmarks.run", "--quick",
+                   "--only", "serve"]
+            print("+", " ".join(cmd), f"(BENCH_REPORT_DIR={scratch})")
+            proc = subprocess.run(cmd, cwd=REPO, env=env)
+            if proc.returncode != 0:
+                fail(f"quick serve bench exited {proc.returncode}")
+        baseline = load(BASELINE_DIR, "BENCH_serve")
+        fresh = load(scratch, "BENCH_serve")
+        if baseline is not None and fresh is not None:
+            check_schema("BENCH_serve", baseline, fresh)
+        if fresh is not None:
+            check_serve(fresh)
+        if _failures:
+            print(f"\n{len(_failures)} serve check(s) failed")
+            return 1
+        print("\nserve baseline checks passed")
         return 0
     if not args.skip_run:
         cmd = [sys.executable, "-m", "benchmarks.run", "--quick", "--only", BLOCKS]

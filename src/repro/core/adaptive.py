@@ -1592,6 +1592,19 @@ class ParityController:
         """Shards to drop this step: the posterior-majority straggler count."""
         return int(min(max_parity, int((self.posterior > 0.5).sum())))
 
+    def observe_block(self, latencies: np.ndarray) -> None:
+        """Fold a fused macro-step's ``[K, n_blocks]`` latency block in, one
+        row per decode step IN ORDER — the posterior trajectory is exactly K
+        scalar :meth:`observe` calls (DESIGN.md §14), so the fused decode
+        path converges identically to the scalar loop."""
+        lats = np.asarray(latencies, dtype=np.float64)
+        if lats.ndim != 2 or lats.shape[1] != self.n_blocks:
+            raise ValueError(
+                f"latency block must be [K, {self.n_blocks}], got {lats.shape}"
+            )
+        for row in lats:
+            self.observe(row)
+
 
 class ReplicationController:
     """Training-side analogue of ``ParityController``: pick the gradient-
@@ -1816,6 +1829,19 @@ class DeadlineAwareParity:
             s = self.spike_decay
             self._spike = s * self._spike + (1.0 - s) * mult
         self._calm_steps = 0 if conv.any() else self._calm_steps + 1
+
+    def observe_block(self, latencies: np.ndarray) -> None:
+        """Row-wise fold of a fused macro-step's ``[K, n_blocks]`` latency
+        block — posterior AND economics trajectories (onset rate, spike,
+        calm window) exactly match K scalar :meth:`observe` calls."""
+        lats = np.asarray(latencies, dtype=np.float64)
+        if lats.ndim != 2 or lats.shape[1] != self.controller.n_blocks:
+            raise ValueError(
+                f"latency block must be [K, {self.controller.n_blocks}],"
+                f" got {lats.shape}"
+            )
+        for row in lats:
+            self.observe(row)
 
     @property
     def calm(self) -> bool:

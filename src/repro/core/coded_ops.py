@@ -277,11 +277,13 @@ class CodedLinear:
         params: dict = {}
         if kernel_mode == "auto":
             from repro.kernels.dispatch import choose_coded_linear
+            from repro.sharding.ctx import current_macro_step_k
 
             d = choose_coded_linear(
                 self.out_features, w_coded.shape[1],
                 x.shape[1] if x.ndim == 2 else 1,
                 self.n_data, self.n_parity,
+                macro_k=current_macro_step_k(),
             )
             kernel_mode, params = d.kernel_mode, dict(d.params)
         if kernel_mode is not None and kernel_mode != "svd":
@@ -337,9 +339,11 @@ def coded_block_matmul(
         mode, params = kernel_mode, {}
         if mode == "auto":
             from repro.kernels.dispatch import choose_matvec
+            from repro.sharding.ctx import current_macro_step_k
 
             d = choose_matvec(wc.shape[0], wc.shape[1],
-                              xc.shape[1] if xc.ndim == 2 else 1)
+                              xc.shape[1] if xc.ndim == 2 else 1,
+                              macro_k=current_macro_step_k())
             mode, params = (None if d.impl == "ref" else d.mode), dict(d.params)
         if mode is not None:
             from repro.kernels.ops import coded_matvec

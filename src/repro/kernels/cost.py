@@ -158,6 +158,14 @@ class KernelCost:
                 + hw.svd_us * self.svd_n3 + hw.step_us * self.grid_steps
                 + roof)
 
+    def predicted_block_us(self, hw: HostHardware, k: int) -> float:
+        """Cost of ``k`` fused iterations launched as ONE call (the macro-
+        step decode trace, DESIGN.md §14): the jit dispatch floor is paid
+        once, the body — graph nodes, svd work, grid steps, roofline — k
+        times.  ``k=1`` is exactly :meth:`predicted_us`."""
+        per_iter = self.predicted_us(hw) - hw.dispatch_us
+        return hw.dispatch_us + max(1, int(k)) * per_iter
+
 
 def model_error(predicted_us: float, measured_us: float) -> float:
     """Symmetric ratio error: max/min of (predicted, measured), >= 1."""
@@ -464,23 +472,32 @@ def fit_hardware(
 
 
 def predict_best(
-    op: str, backend: str, hw: HostHardware | None = None, **geom
+    op: str, backend: str, hw: HostHardware | None = None,
+    macro_k: int = 1, **geom
 ) -> tuple[str, float, dict]:
     """Analytical winner for an unseen shape: (impl, predicted_us, params).
 
     Interpret mode is never a candidate (it is not kernel performance), so
     on CPU the Pallas impls are simply absent from the grid; on TPU the
     chosen impl carries its tile parameters.
+
+    ``macro_k > 1`` ranks candidates by the fused-block cost
+    (:meth:`KernelCost.predicted_block_us`) — the dispatch floor amortizes
+    over the k iterations of a macro-step trace, which can flip a winner
+    whose only edge was lower per-call overhead.  The returned time is the
+    per-iteration share (block / k), so it stays comparable with measured
+    per-call rows; at ``macro_k=1`` both ranking and value are unchanged.
     """
     hw = hw or preset(backend)
+    k = max(1, int(macro_k))
     costs = candidate_costs(op, backend, **geom)
-    impl = min(costs, key=lambda k: costs[k].predicted_us(hw))
+    impl = min(costs, key=lambda c: costs[c].predicted_block_us(hw, k))
     params = (
         tile_params(op, **geom)
         if backend != "cpu" and impl in ("fused", "pallas")
         else {}
     )
-    return impl, costs[impl].predicted_us(hw), params
+    return impl, costs[impl].predicted_block_us(hw, k) / k, params
 
 
 # --------------------------------------------------------------------------

@@ -175,12 +175,16 @@ def _backend() -> str:
 
 
 def _resolve(op: str, shape: str, geometry: dict | None,
-             dtype: str, backend: str | None, **geom) -> Decision:
+             dtype: str, backend: str | None, macro_k: int = 1,
+             **geom) -> Decision:
     backend = backend or _backend()
     table = get_table()
     if table is not None:
         e = table.lookup(op, backend, shape, dtype, geometry)
         if e is not None:
+            # table rows are MEASURED per-call winners; the macro-step
+            # amortization only adjusts the analytical fallback below
+            # (re-measuring fused-block cells is tools/autotune.py work)
             return Decision(
                 op=op, impl=e["impl"],
                 mode=e.get("mode") or _impl_mode(e["impl"], backend),
@@ -190,7 +194,9 @@ def _resolve(op: str, shape: str, geometry: dict | None,
         hw = table.hardware(backend)
     else:
         hw = _cost.preset(backend)
-    impl, predicted, params = _cost.predict_best(op, backend, hw, **geom)
+    impl, predicted, params = _cost.predict_best(
+        op, backend, hw, macro_k=macro_k, **geom
+    )
     return Decision(op=op, impl=impl, mode=_impl_mode(impl, backend),
                     params=params, source="model", predicted_us=predicted)
 
@@ -200,13 +206,14 @@ def _resolve(op: str, shape: str, geometry: dict | None,
 # --------------------------------------------------------------------------
 def choose_coded_linear(
     out: int, inner: int, batch: int, n_data: int, n_parity: int,
-    dtype: str = "float32", backend: str | None = None,
+    dtype: str = "float32", backend: str | None = None, macro_k: int = 1,
 ) -> Decision:
     """``CodedLinear.apply`` dispatch; shape key ``outxinnerxbatch``.
 
     Geometries the DecoderCache refuses cannot run the fused kernel (it
     needs the cached recovery matrix) — they stay on the default path,
-    whose decode_blocks falls back to SVD internally.
+    whose decode_blocks falls back to SVD internally.  ``macro_k`` is the
+    fused macro-step length of the enclosing trace (DESIGN.md §14).
     """
     from repro.core.decoding import cacheable
 
@@ -216,25 +223,27 @@ def choose_coded_linear(
     return _resolve(
         "coded_linear", f"{out}x{inner}x{batch}",
         {"n_data": n_data, "n_parity": n_parity}, dtype, backend,
+        macro_k=macro_k,
         out=out, inner=inner, batch=batch, n_data=n_data, n_parity=n_parity,
     )
 
 
 def choose_matvec(r: int, m: int, b: int, dtype: str = "float32",
-                  backend: str | None = None) -> Decision:
+                  backend: str | None = None, macro_k: int = 1) -> Decision:
     """``coded_matvec`` dispatch; shape key ``rxmxb``."""
     return _resolve("coded_matvec", f"{r}x{m}x{b}", None, dtype, backend,
-                    r=r, m=m, b=b)
+                    macro_k=macro_k, r=r, m=m, b=b)
 
 
 def choose_matvec_decode(
     rows: int, m: int, b: int, n_data: int, n_blocks: int,
-    dtype: str = "float32", backend: str | None = None,
+    dtype: str = "float32", backend: str | None = None, macro_k: int = 1,
 ) -> Decision:
     """``coded_matvec_decode`` dispatch; shape key ``rowsxmxb``."""
     return _resolve(
         "coded_matvec_decode", f"{rows}x{m}x{b}",
         {"n_data": n_data, "n_blocks": n_blocks}, dtype, backend,
+        macro_k=macro_k,
         rows=rows, m=m, b=b, n_data=n_data, n_blocks=n_blocks,
     )
 

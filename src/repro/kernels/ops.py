@@ -47,9 +47,14 @@ __all__ = [
 def coded_matvec(a, x, mode: Mode = "interpret", **kw):
     if mode == "auto":
         from repro.kernels.dispatch import choose_matvec
+        from repro.sharding.ctx import current_macro_step_k
 
         b = x.shape[1] if x.ndim == 2 else 1
-        mode, kw = _auto(choose_matvec(a.shape[0], a.shape[1], b), kw)
+        mode, kw = _auto(
+            choose_matvec(a.shape[0], a.shape[1], b,
+                          macro_k=current_macro_step_k()),
+            kw,
+        )
     if mode == "off":
         return _ref.ref_coded_matvec(a, x)
     return coded_matvec_pallas(a, x, interpret=(mode == "interpret"), **kw)
@@ -63,11 +68,13 @@ def coded_matvec_decode(a, x, rec, mode: Mode = "interpret", **kw):
     """
     if mode == "auto":
         from repro.kernels.dispatch import choose_matvec_decode
+        from repro.sharding.ctx import current_macro_step_k
 
         b = x.shape[1] if x.ndim == 2 else 1
         mode, kw = _auto(
             choose_matvec_decode(a.shape[0], a.shape[1], b,
-                                 rec.shape[0], rec.shape[1]),
+                                 rec.shape[0], rec.shape[1],
+                                 macro_k=current_macro_step_k()),
             kw,
         )
     if mode == "off":

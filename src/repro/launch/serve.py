@@ -87,6 +87,11 @@ def main() -> None:
                     help="trace mode: prompt tokens the engine may prefill "
                          "per step (prefill/decode disaggregation); "
                          "default refills every free slot")
+    ap.add_argument("--macro-steps", type=int, default=1,
+                    help="fused macro-step decode K_max (DESIGN.md §14): "
+                         "decode up to K steps per jitted launch with one "
+                         "host sync per block at batch-full steady state; "
+                         "1 keeps the scalar per-token loop")
     ap.add_argument("--seed", type=int, default=0,
                     help="PRNG seed (params, prompts, straggler draws)")
     ap.add_argument("--dry-run", action="store_true",
@@ -102,6 +107,8 @@ def main() -> None:
         ap.error("--tenants must be >= 1")
     if args.tenant_parity and not (args.deadline_parity and args.tenants > 1):
         ap.error("--tenant-parity requires --deadline-parity and --tenants > 1")
+    if args.macro_steps < 1:
+        ap.error("--macro-steps must be >= 1")
 
     from repro.configs import get_config
     from repro.models.config import coded_blocks
@@ -120,7 +127,7 @@ def main() -> None:
               f"vocab={cfg.vocab}")
         print(f"  engine: slots={args.slots} s_max={args.s_max} "
               f"requests={args.requests} prompt_len={args.prompt_len} "
-              f"max_new={args.max_new}")
+              f"max_new={args.max_new} macro_steps={args.macro_steps}")
         print(f"  coded={cfg.coded} parity={cfg.coded_parity if cfg.coded else 0} "
               f"shards={n_shards} straggler_prob={args.straggler_prob} "
               f"adaptive_parity={args.adaptive_parity}")
@@ -218,9 +225,10 @@ def main() -> None:
                           mask_fn=mask_fn, latency_fn=latency_fn,
                           parity_controller=controller, parity_policy=policy,
                           scheduler=sched, clock=clock,
-                          prefill_budget=args.prefill_budget)
+                          prefill_budget=args.prefill_budget,
+                          macro_steps=args.macro_steps)
         while not sched.finished:
-            if eng.step() == 0:
+            if eng.macro_step() == 0:
                 nxt = sched.next_arrival()
                 if nxt is None:
                     break
@@ -228,12 +236,15 @@ def main() -> None:
         res = sched.results()
         dt = clock()
         n_tok = int(res["n_tokens"][np.isfinite(res["t_complete"])].sum())
+        syncs_per_tok = eng.sync_count / max(eng.tokens_emitted, 1)
         print(f"[serve] trace={args.trace} {trace.n_requests} requests, "
               f"{n_tok} tokens in {dt:.2f}s ({n_tok / max(dt, 1e-9):,.1f} tok/s)")
         print(f"  SLO attainment {res['slo_met'].mean():.1%}  "
               f"rejected {int(res['rejected'].sum())}  "
               f"est_step {sched.est_step_time * 1e3:.1f} ms  "
               f"deadline_parity={policy is not None}")
+        print(f"  macro_steps={args.macro_steps}  fused_blocks={eng.macro_blocks}  "
+              f"host_syncs/token={syncs_per_tok:.3f}")
         if args.tenants > 1:
             for c, cls in enumerate(trace.classes):
                 sel = res["tenant"] == c
@@ -244,7 +255,8 @@ def main() -> None:
 
     eng = ServeEngine(model, params, n_slots=args.slots, s_max=args.s_max,
                       mask_fn=mask_fn, latency_fn=latency_fn,
-                      parity_controller=controller)
+                      parity_controller=controller,
+                      macro_steps=args.macro_steps)
     for i in range(args.requests):
         prompt = rng.integers(0, cfg.vocab, size=args.prompt_len).astype(np.int32)
         eng.submit(Request(uid=i, prompt=prompt, max_new_tokens=args.max_new))
@@ -252,10 +264,13 @@ def main() -> None:
     done = eng.run()
     dt = time.time() - t0
     n_tok = sum(len(r.out_tokens) for r in done)
+    syncs_per_tok = eng.sync_count / max(eng.tokens_emitted, 1)
     print(f"[serve] {len(done)} requests, {n_tok} tokens in {dt:.2f}s "
           f"({n_tok / dt:,.1f} tok/s) coded={args.coded} "
           f"straggler_prob={args.straggler_prob} "
-          f"adaptive_parity={controller is not None}")
+          f"adaptive_parity={controller is not None} "
+          f"macro_steps={args.macro_steps} "
+          f"host_syncs/token={syncs_per_tok:.3f}")
     for r in done[:3]:
         print(f"  req {r.uid}: {r.out_tokens[:10]}...")
 

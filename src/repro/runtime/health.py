@@ -40,12 +40,18 @@ class HealthMonitor:
 
     def observe_step_latencies(self, latencies) -> None:
         """One serving step's realized per-shard latencies [n_workers]
-        (np.inf = no result).  Feeds the EW estimates the serving engine's
-        ``latency_fn`` reads — the backward-looking signal the per-step
-        erasure mask is committed from (DESIGN.md §10).  Unreachable shards
-        decay toward a large-but-finite penalty so a recovered shard can
-        re-earn its place."""
+        (np.inf = no result), or a ``[K, n_workers]`` block from a fused
+        macro-step — folded row by row, so the EW trajectory is exactly K
+        scalar calls (DESIGN.md §14).  Feeds the EW estimates the serving
+        engine's ``latency_fn`` reads — the backward-looking signal the
+        per-step erasure mask is committed from (DESIGN.md §10).
+        Unreachable shards decay toward a large-but-finite penalty so a
+        recovered shard can re-earn its place."""
         lat = np.asarray(latencies, dtype=np.float64)
+        if lat.ndim == 2 and lat.shape[1] == self.n_workers:
+            for row in lat:
+                self.observe_step_latencies(row)
+            return
         if lat.shape != (self.n_workers,):
             raise ValueError(f"latencies must be [{self.n_workers}], got {lat.shape}")
         finite = np.isfinite(lat)

@@ -34,6 +34,22 @@ step (the [n_slots] int32 token vector) serves the bookkeeping (EOS, output
 accumulation).  The seed engine pulled the full [n_slots, vocab] fp32
 logits to host and argmax'd in numpy — at 100k+ vocab that transfer was
 the per-token critical path.
+
+Fused macro-steps (DESIGN.md §14): with ``macro_steps=K_max > 1`` the
+engine can decode K steps per launch — a jitted ``lax.scan`` keeps
+``last_tok`` and the KV cache device-resident across the whole block and
+returns a [K, n_slots] token block, ONE host sync per macro-step instead
+of per token.  K is chosen adaptively each macro-step from scheduler
+state: K=1 whenever the WFQ queues are non-empty, a slot is free, prefill
+debt is outstanding, or the parity controller is near an escalation
+boundary; only at batch-full steady state does K ramp toward K_max — so
+admission latency and parity reactivity are preserved on exactly the
+schedules where they matter.  The per-step control decisions (latency
+draw, posterior update, parity level, erasure mask) still run on host,
+one per fused step, BEFORE the block launches; the decode data plane is
+bit-identical to K scalar steps because the scalar loop already decodes
+every slot every step (inactive slots produce discarded tokens), so the
+device trajectory does not depend on mid-block slot retirement.
 """
 from __future__ import annotations
 
@@ -64,6 +80,7 @@ class Request:
     out_tokens: list[int] = field(default_factory=list)
     deadline: float | None = None    # absolute SLO (scheduler-driven mode)
     sched_idx: int | None = None     # TraceScheduler request index
+    finish_step: int | None = None   # engine step count at retirement
 
     @property
     def done(self) -> bool:
@@ -105,6 +122,7 @@ class ServeEngine:
         parity_policy: "DeadlineAwareParity | None" = None,
         clock: Callable[[], float] | None = None,
         prefill_budget: int | None = None,
+        macro_steps: int = 1,
     ):
         """``parity_topup`` allows the engine to RAISE the coded head's
         parity budget at runtime by up to that many blocks: when the
@@ -140,7 +158,13 @@ class ServeEngine:
         (analytical-model fallback for unseen shapes, DESIGN.md §11), an
         explicit mode pins one, None keeps the default cached path.  It is
         installed as a ``sharding.ctx.head_kernel_mode`` context inside the
-        jitted step traces — same threading pattern as the head mesh."""
+        jitted step traces — same threading pattern as the head mesh.
+
+        ``macro_steps`` is K_max for the fused macro-step decode
+        (DESIGN.md §14): ``macro_step()`` may decode up to that many steps
+        per jitted launch (one host sync per block) when the adaptive K
+        policy says the control plane has nothing to do mid-block; 1 (the
+        default) keeps every step scalar."""
         self.model, self.params = model, params
         self.n_slots, self.s_max = n_slots, s_max
         self.mask_fn = mask_fn
@@ -166,9 +190,22 @@ class ServeEngine:
         self.prefill_budget = prefill_budget
         self.encode_mode = encode_mode
         self.head_kernel_mode = head_kernel_mode
+        if macro_steps < 1:
+            raise ValueError("macro_steps must be >= 1")
+        self.macro_steps = int(macro_steps)
         self.parity_events: list[dict] = []
         self._saturated_steps = 0
         self._steps = 0
+        # host-sync accounting (benchmarks/engine_bench.py reads these)
+        self.sync_count = 0         # device->host transfers on the hot path
+        self.tokens_emitted = 0     # tokens appended to request outputs
+        self.macro_blocks = 0       # fused blocks launched (K > 1)
+        self.splice_rebuilds = 0    # full cache-pytree rebuilds (refill)
+        self._pending_splice: list[tuple[int, Any]] = []
+        # control decision computed for a step that has not decoded yet —
+        # set when a mid-block parity raise truncates a fused block (the
+        # post-raise step's control already ran; its decode is next)
+        self._pending_ctrl: tuple | None = None
         self.eos_token = eos_token
         self.queue: deque[Request] = deque()
         self.slots: list[Request | None] = [None] * n_slots
@@ -221,14 +258,34 @@ class ServeEngine:
 
         self._decode = jax.jit(_decode_argmax)
         self._prefill1 = jax.jit(_prefill_argmax)
-        self._fresh_jit = True  # next decode's duration is compile time
+        # fused-block jit bucket cache, keyed by K.  Shape (n_slots, s_max)
+        # and parity geometry are fixed per bind — a parity raise re-binds
+        # and empties the dict — so the key IS the (K, shape, parity)
+        # bucket (DESIGN.md §14)
+        self._decode_block: dict[int, Any] = {}
+        # per-bucket first-call tracking: the first launch of EVERY jitted
+        # entry point after a (re-)bind is compile time, not step time.
+        # The old single `_fresh_jit` flag only excused the first decode —
+        # a parity raise followed by another re-jit path double-counted a
+        # compile into the scheduler's EW step-time estimate
+        self._compiled: set[tuple[str, int]] = set()
+        # cached dummy scan xs per K: a fresh jnp.zeros(k) per block is a
+        # device alloc + transfer on the hot path (the mask values are
+        # never read by the unmasked head)
+        self._zero_xs: dict[int, Any] = {}
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
     def _insert_slot(self, slot: int, req: Request) -> None:
-        """Prefill one request (B=1) and splice its cache into the batch."""
+        """Prefill one request (B=1) and stage its cache for the batch.
+
+        The actual splice into the batch cache is DEFERRED: admissions in
+        one refill pass coalesce into a single pytree rebuild
+        (``_flush_splices``) instead of one full-tree ``.at[].set`` chain
+        per request — the decode cache has dozens of leaves, and a burst
+        of admissions used to pay the whole-tree rebuild once each."""
         batch = {"tokens": jnp.asarray(req.prompt[None])}
         if req.img_embed is not None:
             batch["img_embed"] = jnp.asarray(req.img_embed[None])
@@ -237,28 +294,52 @@ class ServeEngine:
                 np.zeros((1, len(req.prompt), self.model.cfg.d_model), np.float32)
             )
         tok1, cache1 = self._prefill1(self.params, batch)
+        self._pending_splice.append((slot, cache1))
+        self._last_tok = self._last_tok.at[slot].set(tok1[0])  # device-side
+        req.out_tokens.append(int(np.asarray(tok1)[0]))
+        self.sync_count += 1
+        self.tokens_emitted += 1
+        self.slots[slot] = req
+        self._active[slot] = True
 
-        def splice(path, full, one):
+    def _flush_splices(self) -> None:
+        """Apply every staged admission in ONE cache-pytree rebuild.
+
+        A slot admitted twice in one pass (a request that finished at
+        prefill freed it for a later admission) keeps the LAST cache —
+        same final state as sequential splices; ``.at`` with duplicate
+        indices is unspecified, so the dedup is required, not cosmetic."""
+        if not self._pending_splice:
+            return
+        by_slot: dict[int, Any] = {}
+        for slot, cache1 in self._pending_splice:
+            by_slot[slot] = cache1
+        self._pending_splice = []
+        slot_list = sorted(by_slot)
+        ones = [by_slot[s] for s in slot_list]
+        slots_idx = jnp.asarray(slot_list)
+
+        def splice(path, full, *cs):
             ax = _batch_axis(path)
             if ax is None:
                 return full
             ax = ax % full.ndim
-            idx = [slice(None)] * full.ndim
-            idx[ax] = slot
-            one_ax = ax if ax < one.ndim else one.ndim - 1
-            src = jnp.take(one, 0, axis=one_ax)
-            # pad/crop the sequence axis of k/v to the batch cache capacity
-            if src.shape != full[tuple(idx)].shape:
-                tgt = full[tuple(idx)].shape
-                pads = [(0, t - s) for s, t in zip(src.shape, tgt)]
-                src = jnp.pad(src, pads)
-            return full.at[tuple(idx)].set(src.astype(full.dtype))
+            idx: list = [slice(None)] * full.ndim
+            idx[ax] = slots_idx
+            one_ax = ax if ax < cs[0].ndim else cs[0].ndim - 1
+            tgt = full.shape[:ax] + full.shape[ax + 1:]
+            srcs = []
+            for one in cs:
+                src = jnp.take(one, 0, axis=one_ax)
+                # pad the sequence axis of k/v to the batch cache capacity
+                if src.shape != tgt:
+                    pads = [(0, t - s) for s, t in zip(src.shape, tgt)]
+                    src = jnp.pad(src, pads)
+                srcs.append(src.astype(full.dtype))
+            return full.at[tuple(idx)].set(jnp.stack(srcs, axis=ax))
 
-        self.cache = jax.tree_util.tree_map_with_path(splice, self.cache, cache1)
-        self._last_tok = self._last_tok.at[slot].set(tok1[0])  # device-side
-        req.out_tokens.append(int(np.asarray(tok1)[0]))
-        self.slots[slot] = req
-        self._active[slot] = True
+        self.cache = jax.tree_util.tree_map_with_path(splice, self.cache, *ones)
+        self.splice_rebuilds += 1
 
     def _finish_slot(self, slot: int, req: Request, now: float | None) -> None:
         """Retire a request and free its slot — THE one completion path
@@ -266,6 +347,7 @@ class ServeEngine:
         the slot is reusable the same step and can never double-retire)."""
         if self.scheduler is not None and req.sched_idx is not None:
             self.scheduler.on_finish(req.sched_idx, now)
+        req.finish_step = self._steps
         self.completed.append(req)
         self._active[slot] = False
         self.slots[slot] = None
@@ -285,6 +367,14 @@ class ServeEngine:
         return req.done or hit_eos
 
     def _refill(self, now: float | None = None) -> None:
+        """One admission pass; all admitted caches land in a single
+        batched splice (one tree rebuild per pass, not per request)."""
+        try:
+            self._admit_refill(now)
+        finally:
+            self._flush_splices()
+
+    def _admit_refill(self, now: float | None = None) -> None:
         if self.scheduler is not None:
             prompt_spent = 0
             while True:
@@ -391,14 +481,14 @@ class ServeEngine:
         })
 
     # ------------------------------------------------------------------
-    def step(self) -> int:
-        """One batched decode step; returns number of active sequences."""
-        now = self._clock() if self.scheduler is not None else None
-        self._refill(now)
-        if not self._active.any():
-            return 0
-        self._steps += 1
-        mask = None
+    def _control_step(self, now: float | None) -> np.ndarray | None:
+        """One step's host control plane: observe latencies through the
+        parity policy/controller, run saturation top-up, convert slack to
+        a parity level, and commit this step's erasure mask (None when the
+        head is uncoded/unmasked).  Mutates controller state exactly as
+        the scalar loop always has — the fused path calls this once per
+        fused step BEFORE launching the block, so posterior trajectories
+        match the scalar loop bit for bit."""
         if self.model.cfg.coded and self.latency_fn is not None:
             # first decodable subset: keep the n_data earliest shards this
             # step, drop the laggards — the mask-keyed DecoderCache decodes
@@ -450,35 +540,23 @@ class ServeEngine:
                     n_par = self.parity_policy.level(n_par, slack)
                 else:
                     n_par = self.parity_controller.parity_level(n_par)
-            mask = jnp.asarray(
-                first_decodable_mask(lat, n_blocks - n_par, n_par), jnp.float32
+            return np.asarray(
+                first_decodable_mask(lat, n_blocks - n_par, n_par), np.float32
             )
-        elif self.mask_fn is not None and self.model.cfg.coded:
-            mask = jnp.asarray(self.mask_fn(), jnp.float32)
-        # step-time measurement starts HERE: _refill's prefills (and their
-        # jit compiles) are admission work, not decode-step time
-        t_decode0 = self._clock() if self.scheduler is not None else None
-        toks_dev, self.cache = self._decode(
-            self.params, self.cache, self._last_tok, mask
-        )
-        self._last_tok = toks_dev           # feeds next step, never leaves device
-        toks = np.asarray(toks_dev)         # the ONE host transfer per step
-        t_done = None
-        if self.scheduler is not None:
-            t_done = self._clock()
-            if self._fresh_jit:
-                # first decode after a (re-)jit: the duration is compile
-                # time, not a step time — feeding it would poison the EW
-                # estimate and make admission reject feasible arrivals
-                self._fresh_jit = False
-            else:
-                self.scheduler.observe_step(t_done - t_decode0)
+        if self.mask_fn is not None and self.model.cfg.coded:
+            return np.asarray(self.mask_fn(), np.float32)
+        return None
+
+    def _apply_step(self, toks: np.ndarray, t_done: float | None) -> None:
+        """Post-decode bookkeeping for one step's [n_slots] token row:
+        output accumulation, EOS, scheduler completion, slot retirement."""
         for s in range(self.n_slots):
             if not self._active[s]:
                 continue
             req = self.slots[s]
             tok = int(toks[s])
             req.out_tokens.append(tok)
+            self.tokens_emitted += 1
             hit_eos = self.eos_token is not None and tok == self.eos_token
             done_sched = False
             if self.scheduler is not None and req.sched_idx is not None:
@@ -487,14 +565,296 @@ class ServeEngine:
                 # EOS can land before the token budget: _finish_slot force-
                 # completes on the scheduler and frees the slot this step
                 self._finish_slot(s, req, t_done)
+
+    def step(self) -> int:
+        """One batched decode step; returns number of active sequences."""
+        now = self._clock() if self.scheduler is not None else None
+        self._refill(now)
+        if not self._active.any():
+            return 0
+        self._steps += 1
+        if self._pending_ctrl is not None:
+            # a truncated fused block already ran this step's control
+            m = self._pending_ctrl[0]
+            self._pending_ctrl = None
+        else:
+            m = self._control_step(now)
+        mask = None if m is None else jnp.asarray(m, jnp.float32)
+        # step-time measurement starts HERE: _refill's prefills (and their
+        # jit compiles) are admission work, not decode-step time
+        t_decode0 = self._clock() if self.scheduler is not None else None
+        toks_dev, self.cache = self._decode(
+            self.params, self.cache, self._last_tok, mask
+        )
+        self._last_tok = toks_dev           # feeds next step, never leaves device
+        toks = np.asarray(toks_dev)         # the ONE host transfer per step
+        self.sync_count += 1
+        t_done = None
+        if self.scheduler is not None:
+            t_done = self._clock()
+            if ("decode", 1) in self._compiled:
+                self.scheduler.observe_step(t_done - t_decode0)
+            else:
+                # first call of this jit bucket since the (re-)bind: the
+                # duration is compile time, not a step time — feeding it
+                # would poison the EW estimate and make admission reject
+                # feasible arrivals
+                self._compiled.add(("decode", 1))
+        elif ("decode", 1) not in self._compiled:
+            self._compiled.add(("decode", 1))
+        self._apply_step(toks, t_done)
         return int(self._active.sum())
+
+    # ------------------------------------------------------------------
+    # fused macro-step decode (DESIGN.md §14)
+    # ------------------------------------------------------------------
+    def _ctrl_snapshot(self) -> tuple:
+        """Controller/policy state needed to roll back control decisions
+        taken for fused steps that end up never decoding (the batch
+        drained mid-block)."""
+        ctrl, pol = self.parity_controller, self.parity_policy
+        return (
+            None if ctrl is None else ctrl.posterior.copy(),
+            None if pol is None else (
+                pol._onset_rate, pol._spike, pol._calm_steps
+            ),
+            self._saturated_steps,
+        )
+
+    def _ctrl_restore(self, snap: tuple) -> None:
+        post, pol_state, sat = snap
+        if post is not None:
+            self.parity_controller.posterior = post
+        if pol_state is not None:
+            pol = self.parity_policy
+            pol._onset_rate, pol._spike, pol._calm_steps = pol_state
+        self._saturated_steps = sat
+
+    def _choose_k(self) -> int:
+        """Fused block length for the NEXT macro-step, from control-plane
+        state: K=1 whenever any per-step control decision could differ
+        mid-block — queued work, a free slot, prefill debt, an imminent
+        arrival, scarce deadline slack, or a parity controller near its
+        escalation boundary.  Only a full batch at steady state ramps
+        toward ``macro_steps``; K is quantized down to a power of two so
+        the jit bucket cache stays small."""
+        if self.macro_steps <= 1 or not self._active.any():
+            return 1
+        if self.queue or not self._active.all():
+            return 1  # admission work possible: stay reactive
+        k = self.macro_steps
+        # cap at the longest remaining token budget (after that the whole
+        # batch has drained; EOS can still empty it earlier — the replay
+        # loop rolls back the over-provisioned control steps)
+        rem = max(
+            req.max_new_tokens - len(req.out_tokens)
+            for s, req in enumerate(self.slots)
+            if self._active[s]
+        )
+        k = min(k, max(rem, 1))
+        sched = self.scheduler
+        if sched is not None:
+            now = self._clock()
+            if sched.pending(now) > 0 or sched.has_prefill_debt:
+                return 1
+            est = max(sched.est_step_time, 1e-12)
+            nxt = sched.next_arrival()
+            if nxt is not None:
+                # never decode past the next arrival's admission step
+                k = min(k, max(1, int((nxt - now) / est)))
+            if self.parity_policy is not None:
+                # never fuse past the point slack could force escalation
+                esc = max(
+                    getattr(self.parity_policy, "class_escalate",
+                            (self.parity_policy.escalate_steps,))
+                )
+                slack = sched.min_slack_steps(now)
+                if np.isfinite(slack):
+                    k = min(k, max(1, int(slack - esc)))
+        if self.parity_controller is not None and self.parity_topup > 0:
+            believed = int((self.parity_controller.posterior > 0.5).sum())
+            if self._saturated_steps > 0 or believed >= self.model.cfg.coded_parity:
+                return 1  # a top-up raise may be steps away: stay scalar
+        p = 1
+        while p * 2 <= k:
+            p *= 2
+        return p
+
+    def _block_fn(self, k: int):
+        """The K-bucket jitted block: ``lax.scan`` over K decode steps,
+        device-resident carry (last_tok, cache), [K, n_slots] token block
+        out.  Buckets are cached per bind — shape and parity geometry are
+        fixed between binds, so K alone keys the (K, shape, parity)
+        bucket."""
+        fn = self._decode_block.get(k)
+        if fn is not None:
+            return fn
+        from repro.sharding.ctx import (
+            coded_head_mesh,
+            head_kernel_mode,
+            macro_step_k,
+        )
+
+        model = self.model
+        mesh, axis = self._mesh, self._head_axis
+        kmode = self.head_kernel_mode
+        masked = self.model.cfg.coded and (
+            self.latency_fn is not None or self.mask_fn is not None
+        )
+
+        def _decode_block(params, cache, last_tok, masks):
+            def body(carry, m):
+                lt, c = carry
+                with coded_head_mesh(mesh, axis), head_kernel_mode(kmode), \
+                        macro_step_k(k):
+                    logits, c = model.decode_step(
+                        params, c, lt, m if masked else None
+                    )
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                return (tok, c), tok
+
+            (lt, cache), toks = jax.lax.scan(body, (last_tok, cache), masks)
+            return toks, lt, cache
+
+        fn = jax.jit(_decode_block)
+        self._decode_block[k] = fn
+        return fn
+
+    def _fused_block(self, k: int) -> int:
+        """Decode ``k`` steps in one jitted launch with ONE host sync.
+
+        Control runs first, k times on host (masks, posteriors, top-up
+        checks — scalar-exact mutation order); then the block launches and
+        the [k, n_slots] token rows replay through the scalar
+        bookkeeping.  Two truncation paths keep scalar equivalence:
+
+          * a mid-block parity RAISE re-binds the model, so the pre-raise
+            steps replay through the OLD jitted step scalar-wise and the
+            post-raise control result is stashed for the next ``step()``;
+          * the batch DRAINING mid-block (EOS) stops the replay early and
+            rolls controller state back to the last executed step — the
+            scalar loop would never have run those trailing control steps.
+            (``latency_fn``-internal state — health monitors, RNG — stays
+            advanced; an all-slots drain in the same block as a raise
+            additionally cannot un-encode.  Both are outside the fused
+            gate's steady-state envelope and documented in DESIGN.md §14.)
+        """
+        now = self._clock() if self.scheduler is not None else None
+        self._refill(now)  # the K gate makes this a no-op; seam kept
+        if not self._active.any():
+            return 0
+        s0 = self._steps
+        n_events = len(self.parity_events)
+        old_decode, old_params = self._decode, self.params
+        comp_before = self._compiled
+        snaps: list[tuple] = []
+        masks: list[np.ndarray | None] = []
+        raised = False
+        for t in range(k):
+            snaps.append(self._ctrl_snapshot())
+            self._steps = s0 + t + 1  # raise events record scalar-exact steps
+            m = self._control_step(now)
+            if len(self.parity_events) > n_events:
+                raised = True
+                self._pending_ctrl = (m,)  # the post-raise step's control
+                break
+            masks.append(m)
+        self._steps = s0
+        k_exec = len(masks)
+        if raised and k_exec == 0:
+            return self.step()  # consumes the pending control immediately
+        if raised:
+            # degrade: replay the pre-raise steps through the OLD jitted
+            # scalar step (the raise re-bound self._decode to the new
+            # geometry; these steps belong to the old one)
+            executed = 0
+            for t in range(k_exec):
+                self._steps += 1
+                m = masks[t]
+                mask = None if m is None else jnp.asarray(m, jnp.float32)
+                t0 = self._clock() if self.scheduler is not None else None
+                toks_dev, self.cache = old_decode(
+                    old_params, self.cache, self._last_tok, mask
+                )
+                self._last_tok = toks_dev
+                toks = np.asarray(toks_dev)
+                self.sync_count += 1
+                t_done = None
+                if self.scheduler is not None:
+                    t_done = self._clock()
+                    if ("decode", 1) in comp_before:
+                        self.scheduler.observe_step(t_done - t0)
+                    else:
+                        comp_before.add(("decode", 1))
+                self._apply_step(toks, t_done)
+                executed += 1
+                if not self._active.any():
+                    break
+            if not self._active.any():
+                # the batch drained before the post-raise step ran: its
+                # stashed control must not leak onto a future step, and
+                # the scalar loop would have stopped at `executed`
+                self._pending_ctrl = None
+                self._ctrl_restore(snaps[executed])
+            return int(self._active.sum())
+        blk = self._block_fn(k)
+        fresh = ("decode", k) not in self._compiled
+        self._compiled.add(("decode", k))
+        if masks[0] is None:
+            mstack = self._zero_xs.get(k)  # dummy scan xs, unmasked head
+            if mstack is None:
+                mstack = self._zero_xs[k] = jnp.zeros(k)
+        else:
+            mstack = jnp.asarray(np.stack(masks), jnp.float32)
+        t0 = self._clock() if self.scheduler is not None else None
+        toks_blk, self._last_tok, self.cache = blk(
+            self.params, self.cache, self._last_tok, mstack
+        )
+        toks = np.asarray(toks_blk)  # THE one host transfer for the block
+        self.sync_count += 1
+        self.macro_blocks += 1
+        t_done = None
+        dt = 0.0
+        if self.scheduler is not None:
+            t_done = self._clock()
+            dt = (t_done - t0) / k  # per-step share of the block time
+        executed = 0
+        for t in range(k):
+            self._steps += 1
+            if self.scheduler is not None and not fresh and dt > 0:
+                # K equal observes of the block mean: same total EW mass
+                # as the scalar loop's K per-step observes
+                self.scheduler.observe_step(dt)
+            self._apply_step(toks[t], t_done)
+            executed += 1
+            if not self._active.any():
+                break
+        if executed < k:
+            # EOS drained the batch early: the scalar loop would have
+            # stopped here — roll back the trailing control decisions
+            self._ctrl_restore(snaps[executed])
+        return int(self._active.sum())
+
+    def macro_step(self) -> int:
+        """One macro-step: a fused K-step block at batch-full steady
+        state, a scalar ``step()`` whenever the control plane needs per-
+        step reactivity.  Drop-in replacement for ``step()`` in drive
+        loops; with ``macro_steps=1`` it IS ``step()``."""
+        if self.macro_steps <= 1 or self._pending_ctrl is not None:
+            return self.step()
+        k = self._choose_k()
+        if k <= 1:
+            return self.step()
+        return self._fused_block(k)
 
     def run(self, max_steps: int = 10_000) -> list[Request]:
         """Drain the queue (or, with a scheduler, the trace — the caller's
         clock must advance past arrivals; see launch.serve for the
-        wall-clock drive loop).  Returns completed requests."""
+        wall-clock drive loop).  Returns completed requests.  Iterates
+        ``macro_step()``: scalar per-step behaviour unless ``macro_steps``
+        opted into fused blocks."""
         for _ in range(max_steps):
-            busy = self.step()
+            busy = self.macro_step()
             if self.scheduler is not None:
                 if self.scheduler.finished and busy == 0:
                     break

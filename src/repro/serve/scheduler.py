@@ -270,6 +270,26 @@ class TraceScheduler:
             cand.append(self.requests[self._next].t_arrival)
         return min(cand) if cand else None
 
+    def pending(self, now: float) -> int:
+        """Requests waiting for admission as of ``now``: the per-class
+        backlogs plus trace-cursor arrivals with ``t_arrival <= now`` that
+        a ``_pump`` would enqueue.  Non-mutating — the engine's macro-step
+        K policy polls this between admission passes (DESIGN.md §14), and
+        peeking must not advance the cursor."""
+        n = sum(len(q) for q in self._queues)
+        i = self._next
+        while i < len(self.requests) and self.requests[i].t_arrival <= now:
+            n += 1
+            i += 1
+        return n
+
+    @property
+    def has_prefill_debt(self) -> bool:
+        """True while any admitted request still owes prefill tokens —
+        the continuous-batching state where step budget must keep flowing
+        to prefill chunks, so fused macro-steps stay at K=1."""
+        return any(r.prefill_left > 0 for r in self._active.values())
+
     def _extra_steps(self, n_prefill: int) -> int:
         """Estimated steps the given prefill debt costs at the nominal
         per-step prefill budget (ceil division; 0 when no prefill)."""

@@ -26,6 +26,12 @@ _CODED_HEAD: ContextVar[tuple | None] = ContextVar("coded_head_mesh", default=No
 # dispatch; None keeps the default cached path.
 _HEAD_KMODE: ContextVar[str | None] = ContextVar("head_kernel_mode", default=None)
 
+# fused macro-step length K — installed by the serving engine around its
+# K-step block traces (DESIGN.md §14).  'auto' kernel dispatch reads it to
+# amortize the per-call dispatch floor over the K fused iterations when
+# ranking candidate implementations; 1 (the default) is the scalar step.
+_MACRO_K: ContextVar[int] = ContextVar("macro_step_k", default=1)
+
 
 def current_hints() -> dict | None:
     return _HINTS.get()
@@ -80,6 +86,26 @@ def head_kernel_mode(mode: str | None):
         yield
     finally:
         _HEAD_KMODE.reset(token)
+
+
+def current_macro_step_k() -> int:
+    """Fused macro-step length for the trace being built (1 = scalar)."""
+    return _MACRO_K.get()
+
+
+@contextlib.contextmanager
+def macro_step_k(k: int | None):
+    """Declare that the enclosed trace decodes ``k`` fused iterations per
+    launch, so 'auto' kernel dispatch amortizes its per-call overhead term
+    accordingly (DESIGN.md §14).  ``None`` / ``k <= 1`` is a no-op."""
+    if k is None or k <= 1:
+        yield
+        return
+    token = _MACRO_K.set(int(k))
+    try:
+        yield
+    finally:
+        _MACRO_K.reset(token)
 
 
 def shard_hint(x: jax.Array, name: str) -> jax.Array:

@@ -26,6 +26,10 @@ in place), then diffs the fresh artifacts against the committed baselines:
                     coded goodput above uncoded under injection, goodput
                     monotone in decode occupancy, and no SLO class
                     starved under WFQ admission;
+      - engine:     fused macro-step decode bit-identical to the scalar
+                    engine in every (K, slots) cell, K=64 at least K=1
+                    tokens/sec at every batch-full cell, and >= 4x fewer
+                    host syncs per token at K=64 (DESIGN.md §14);
   * upload: the fresh encode-kernel rows (``gaussian_encode``) are merged
     into the committed ``reports/bench/kernels.json`` so the new kernel's
     numbers ride along without hand-editing (other rows untouched);
@@ -40,7 +44,9 @@ in place), then diffs the fresh artifacts against the committed baselines:
     ``--autotune-only`` runs just that re-measure + check (the CI
     autotune-consistency job); ``--train-only`` runs just the quick train
     bench + its gate (the CI coded-training job); ``--serve-only`` runs
-    just the quick serve bench + its gate (the CI serve-batch job).
+    just the quick serve bench + its gate (the CI serve-batch job);
+    ``--engine-only`` runs just the quick engine bench + its check_engine
+    gate (the CI engine-fused job).
 
 Exit code 0 = baselines healthy; 1 = a check failed (printed).
 """
@@ -58,9 +64,9 @@ sys.path.insert(0, os.path.join(REPO, "src"))
 from repro.kernels.cost import MODEL_ERROR_BOUND  # noqa: E402
 
 BASELINE_DIR = os.path.join(REPO, "reports", "bench")
-BLOCKS = "kernels,decode,streaming,adaptive,serve,train"
+BLOCKS = "kernels,decode,streaming,adaptive,serve,engine,train"
 FILES = ["kernels", "BENCH_decode", "BENCH_streaming", "BENCH_adaptive",
-         "BENCH_serve", "BENCH_train"]
+         "BENCH_serve", "BENCH_engine", "BENCH_train"]
 TRAIN_P99_SLOW = 10.0  # p99 gate applies at cells this violent or worse
 #                        (at the paper's 3x tier an onset step necessarily
 #                        costs ~2x a slow step, and onsets are p99-frequent,
@@ -206,6 +212,41 @@ def check_serve(fresh: list[dict]) -> None:
             if r.get("min_class_served_frac", 0.0) <= 0.0:
                 fail(f"serve: an SLO class starved under WFQ "
                      f"({policy}, {r['n_slots']} slots)")
+
+
+def check_engine(fresh: list[dict]) -> None:
+    """The engine bench's acceptance relations (ISSUE 9), re-checked on
+    the fresh run — all scale-free (quick mode shrinks the slots grid,
+    never the relations):
+
+      * every (K, slots) cell's fused engine emitted the scalar engine's
+        exact token streams (the ``bit_identical`` column — re-proved per
+        cell against the K=1 run on identical prompts, DESIGN.md §14);
+      * K=64 tokens/sec at least the scalar engine's in every batch-full
+        slots group (the fused path must never cost throughput);
+      * >= 4x fewer host syncs per token at K=64 vs K=1 per slots group
+        (a deterministic counter relation: one transfer per fused block
+        instead of one per token row)."""
+    for r in fresh:
+        if not r.get("bit_identical", False):
+            fail(f"engine: fused decode not bit-identical to the scalar "
+                 f"engine at (k={r.get('k')}, slots={r.get('n_slots')})")
+    groups: dict[int, dict[int, dict]] = {}
+    for r in fresh:
+        groups.setdefault(r["n_slots"], {})[r["k"]] = r
+    for n_slots, cells in groups.items():
+        if not {1, 64} <= set(cells):
+            fail(f"engine: {n_slots}-slot group missing the K=1/K=64 arms "
+                 f"(have K={sorted(cells)})")
+            continue
+        k1, k64 = cells[1], cells[64]
+        if k64["tok_per_s"] < k1["tok_per_s"]:
+            fail(f"engine: K=64 below scalar tokens/sec at {n_slots} slots "
+                 f"({k64['tok_per_s']:.0f} < {k1['tok_per_s']:.0f})")
+        ratio = k1["syncs_per_token"] / max(k64["syncs_per_token"], 1e-12)
+        if ratio < 4.0:
+            fail(f"engine: host-sync reduction below 4x at {n_slots} slots "
+                 f"({ratio:.1f}x)")
 
 
 def check_train(fresh: list[dict]) -> None:
@@ -355,6 +396,11 @@ def main() -> int:
                          "and its check_serve gate — batched/scalar bit "
                          "identity, goodput-vs-occupancy monotonicity, WFQ "
                          "no-starvation (the CI serve-batch job)")
+    ap.add_argument("--engine-only", action="store_true",
+                    help="run only the quick engine bench into the scratch "
+                         "dir and its check_engine gate — fused/scalar bit "
+                         "identity, K=64 tokens/sec >= K=1, >= 4x host-sync "
+                         "reduction (the CI engine-fused job)")
     args = ap.parse_args()
     scratch = os.path.abspath(args.scratch)
     if os.path.realpath(scratch) == os.path.realpath(BASELINE_DIR):
@@ -418,6 +464,25 @@ def main() -> int:
             return 1
         print("\nserve baseline checks passed")
         return 0
+    if args.engine_only:
+        if not args.skip_run:
+            cmd = [sys.executable, "-m", "benchmarks.run", "--quick",
+                   "--only", "engine"]
+            print("+", " ".join(cmd), f"(BENCH_REPORT_DIR={scratch})")
+            proc = subprocess.run(cmd, cwd=REPO, env=env)
+            if proc.returncode != 0:
+                fail(f"quick engine bench exited {proc.returncode}")
+        baseline = load(BASELINE_DIR, "BENCH_engine")
+        fresh = load(scratch, "BENCH_engine")
+        if baseline is not None and fresh is not None:
+            check_schema("BENCH_engine", baseline, fresh)
+        if fresh is not None:
+            check_engine(fresh)
+        if _failures:
+            print(f"\n{len(_failures)} engine check(s) failed")
+            return 1
+        print("\nengine baseline checks passed")
+        return 0
     if not args.skip_run:
         cmd = [sys.executable, "-m", "benchmarks.run", "--quick", "--only", BLOCKS]
         print("+", " ".join(cmd), f"(BENCH_REPORT_DIR={scratch})")
@@ -440,6 +505,8 @@ def main() -> int:
         check_adaptive(fresh_by_name["BENCH_adaptive"])
     if fresh_by_name.get("BENCH_serve"):
         check_serve(fresh_by_name["BENCH_serve"])
+    if fresh_by_name.get("BENCH_engine"):
+        check_engine(fresh_by_name["BENCH_engine"])
     if fresh_by_name.get("BENCH_train"):
         check_train(fresh_by_name["BENCH_train"])
     if fresh_by_name.get("kernels"):

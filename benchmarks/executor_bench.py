@@ -1,0 +1,151 @@
+"""Wall-clock executor bench: the backend seam measured for real (§15).
+
+Three sections, one artifact (``BENCH_executor.json``):
+
+  * executor_identity — the determinism contract, re-proved per cell: the
+    same seed through the model-time oracle and a wall-clock backend
+    (thread and process tiers, LT and Gaussian codes) must produce
+    BIT-identical payload fields (decoded y, row mask, arrival order).
+  * executor_straggler — the paper's §5.3.1 cells on real OS processes:
+    workers PACED to the model schedule (20% unexpected stragglers), so the
+    wall clock reproduces the emulated experiment — BPCC vs HCMM completion
+    in true seconds.  The committed full-mode run must show BPCC <= HCMM.
+  * executor_throughput — pacing off: workers stream coded batches as fast
+    as the hardware computes them.  First true requests-per-second numbers
+    for the executor (end-to-end: encode + distribute + drain + decode).
+
+Timing columns are wall seconds and vary run to run; every gate on them in
+``tools/bench_compare.check_executor`` is an ordering or a loose sanity
+band, never an absolute number.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.cluster import (
+    ClusterEmulator,
+    ProcessBackend,
+    StragglerPolicy,
+    TaskSpec,
+    ec2_scenario,
+)
+from repro.utils.prng import rng as _rng
+
+# identity/throughput sections: compress model time away entirely (pacing
+# is irrelevant to bit-identity, and throughput wants pacing ~0)
+TIME_SCALE = 0.01
+# straggler section: EXPAND model time so paced sleeps dominate delivery
+# jitter — the emulated grid's model completions are ~0.02-0.06 model-s, and
+# the BPCC-vs-HCMM gap (~3-5%) must map to wall gaps well above millisecond
+# scheduling noise
+PACE_SCALE_QUICK = 75.0
+PACE_SCALE_FULL = 150.0
+
+
+def _task(r: int, m: int, seed: int):
+    g = _rng(seed)
+    a = g.standard_normal((r, m)).astype(np.float32)
+    x = g.standard_normal(m).astype(np.float32)
+    return a, x
+
+
+def _payload_identical(res, oracle) -> bool:
+    """The §15 contract, field by field (bitwise)."""
+    return bool(
+        res.ok == oracle.ok
+        and np.array_equal(res.y, oracle.y)
+        and res.rows_received == oracle.rows_received
+        and np.array_equal(res.rows_mask, oracle.rows_mask)
+        and res.rows_assigned == oracle.rows_assigned
+        and res.arrival_order() == oracle.arrival_order()
+    )
+
+
+def run(quick: bool = False) -> None:
+    r, m = (400, 64) if quick else (1200, 256)
+    trials = 2 if quick else 5
+    _, workers = ec2_scenario(1)
+    a, x = _task(r, m, seed=0)
+    rows: list[dict] = []
+
+    # ---- identity cells: oracle vs wall-clock backends -------------------
+    for code in ("lt", "gaussian"):
+        for tier in ("thread", "process"):
+            oracle = ClusterEmulator(
+                workers, time_scale=TIME_SCALE, seed=21
+            ).run_task(a, x, TaskSpec(code=code))
+            res = ClusterEmulator(
+                workers, time_scale=TIME_SCALE, seed=21
+            ).run_task(a, x, TaskSpec(code=code, backend=tier))
+            rows.append({
+                "bench": "executor_identity", "code": code, "backend": tier,
+                "payload_identical": _payload_identical(res, oracle),
+                "ok": bool(res.ok),
+                "rows_received": int(res.rows_received),
+                "t_wall": float(res.t_wall),
+            })
+
+    # ---- straggler cells: paced processes, BPCC vs HCMM in wall seconds --
+    # a dedicated small task in both modes: the section's claim is the
+    # paper's §5.3.1 scheme ORDERING in true seconds, and the pace scale is
+    # tuned to this task's model-time range
+    a_s, x_s = _task(400, 64, seed=1)
+    pace_scale = PACE_SCALE_QUICK if quick else PACE_SCALE_FULL
+    for scheme in ("bpcc", "hcmm"):
+        tw, tms = [], []
+        ident = True
+        for t in range(trials):
+            seed = 100 + t  # paired seeds: both schemes see the same draws
+            mk = lambda ts: ClusterEmulator(  # noqa: E731
+                workers, time_scale=ts,
+                straggler=StragglerPolicy(prob=0.2), seed=seed,
+            )
+            # payload is time_scale-invariant (the schedule is model
+            # seconds; time_scale only paces workers), so the oracle runs
+            # compressed while the wall run is expanded
+            oracle = mk(TIME_SCALE).run_task(a_s, x_s, TaskSpec(scheme=scheme))
+            res = mk(pace_scale).run_task(a_s, x_s, TaskSpec(scheme=scheme,
+                                                             backend="process"))
+            ident &= _payload_identical(res, oracle)
+            tw.append(res.t_complete)                    # wall seconds
+            tms.append(oracle.t_complete * pace_scale)   # scaled model secs
+        rows.append({
+            "bench": "executor_straggler", "scheme": scheme,
+            "backend": "process", "trials": trials,
+            "pace_scale": pace_scale,
+            "mean_T_wall": float(np.mean(tw)),
+            "mean_T_model_scaled": float(np.mean(tms)),
+            "payload_identical": bool(ident),
+        })
+
+    # ---- throughput: pacing off, true requests per second ----------------
+    for tier in ("thread", "process"):
+        be = ProcessBackend(pace=False, tier=tier)
+        walls, got = [], []
+        n_ok = 0
+        t0 = time.perf_counter()
+        for t in range(trials):
+            em = ClusterEmulator(workers, time_scale=TIME_SCALE, seed=50 + t)
+            res = em.run_task(a, x, TaskSpec(backend=be))
+            walls.append(res.t_wall)
+            got.append(res.rows_received)
+            n_ok += int(res.ok)
+        elapsed = time.perf_counter() - t0
+        rows.append({
+            "bench": "executor_throughput", "backend": tier, "pace": False,
+            "trials": trials, "n_ok": n_ok,
+            # end-to-end serve rate: encode + distribute + drain + decode
+            "requests_per_sec": float(trials / elapsed),
+            # drain-only view: coded rows ingested per wall second
+            "mean_t_wall": float(np.mean(walls)),
+            "coded_rows_per_sec": float(np.mean(got) / np.mean(walls)),
+        })
+
+    emit("BENCH_executor", rows)
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -10,7 +10,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import emit
-from repro.cluster import ClusterEmulator, StragglerPolicy, ec2_scenario
+from repro.cluster import ClusterEmulator, StragglerPolicy, TaskSpec, ec2_scenario
 from repro.utils.prng import rng as _rng
 
 SCHEMES = ["uniform", "load_balanced", "hcmm", "bpcc"]
@@ -42,7 +42,7 @@ def fig8_scheme_comparison(quick: bool = False, scale: int = 20) -> None:
                                  straggler=StragglerPolicy(prob=0.2), seed=100 + s)
             ts, ds = [], []
             for t in range(trials):
-                res = em.run_task(a, x, scheme, code="lt")
+                res = em.run_task(a, x, TaskSpec(scheme=scheme, code="lt"))
                 assert res.ok
                 ts.append(res.t_complete)
                 ds.append(res.t_decode)
@@ -60,7 +60,7 @@ def fig9_accumulation(quick: bool = False, scale: int = 20) -> None:
     for scheme in SCHEMES:
         em = ClusterEmulator(workers, time_scale=1.0,
                              straggler=StragglerPolicy(prob=0.2), seed=42)
-        res = em.run_task(a, x, scheme, code="lt")
+        res = em.run_task(a, x, TaskSpec(scheme=scheme, code="lt"))
         grid = np.linspace(0, res.t_complete, 12)
         for t, v in zip(grid, res.rows_by_time(grid)):
             rows.append({"scheme": scheme, "t": float(t), "rows": float(v)})
@@ -77,7 +77,7 @@ def fig10_straggler_sweep(quick: bool = False, scale: int = 20) -> None:
         for scheme in SCHEMES:
             em = ClusterEmulator(workers, time_scale=1.0,
                                  straggler=StragglerPolicy(prob=prob), seed=7)
-            ts = [em.run_task(a, x, scheme, code="lt").t_complete
+            ts = [em.run_task(a, x, TaskSpec(scheme=scheme, code="lt")).t_complete
                   for _ in range(trials)]
             rows.append({"straggler_prob": prob, "scheme": scheme,
                          "mean_T": float(np.mean(ts))})
@@ -93,7 +93,7 @@ def fig11_p_sweep(quick: bool = False, scale: int = 20) -> None:
     for p in [1, 5, 10, 25, 50, 100]:
         em = ClusterEmulator(workers, time_scale=1.0,
                              straggler=StragglerPolicy(prob=0.2), seed=13)
-        ts = [em.run_task(a, x, "bpcc", p=p, code="lt").t_complete
+        ts = [em.run_task(a, x, TaskSpec(scheme="bpcc", p=p, code="lt")).t_complete
               for _ in range(trials)]
         rows.append({"p": p, "mean_T": float(np.mean(ts))})
     emit("fig11_ec2_p_sweep", rows)

@@ -25,6 +25,7 @@ BLOCKS = {
     "serve": ("serve_bench", "BENCH_serve.json (trace-driven serving: SLO attainment/goodput under stragglers)"),
     "engine": ("engine_bench", "BENCH_engine.json (fused macro-step decode: host syncs/token + tokens/sec vs K)"),
     "train": ("train_bench", "BENCH_train.json (coded data-parallel training: tokens/sec + step-time p99 under Markov stragglers)"),
+    "executor": ("executor_bench", "BENCH_executor.json (wall-clock backends: oracle bit-identity, paced BPCC-vs-HCMM seconds, unpaced requests/sec)"),
     "roofline": ("roofline_bench", "roofline.json (per-cell roofline terms; self-generates its dryrun input)"),
 }
 
@@ -39,7 +40,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list of blocks to run: "
                          "sim,ec2,kernels,decode,streaming,adaptive,serve,"
-                         "engine,train,roofline")
+                         "engine,train,executor,roofline")
     ap.add_argument("--dry-run", action="store_true",
                     help="print the resolved block list and the artifacts "
                          "each block writes, without executing")

@@ -1,6 +1,7 @@
 """Reproduce the paper's EC2 Experiment 1 + 2 (Figs 8, 10) on the emulator.
 
     PYTHONPATH=src python examples/ec2_repro.py [--scale 40] [--trials 8]
+                                                [--backend model|thread|process]
 
 Instance mixes and (mu, alpha) come from the paper's Table 1; matrix sizes
 are scaled down so the grid runs in minutes.  Expected qualitative results
@@ -14,7 +15,7 @@ import argparse
 
 import numpy as np
 
-from repro.cluster import ClusterEmulator, StragglerPolicy, ec2_scenario
+from repro.cluster import ClusterEmulator, StragglerPolicy, TaskSpec, ec2_scenario
 from repro.utils.prng import rng as _rng
 
 SCHEMES = ["uniform", "load_balanced", "hcmm", "bpcc"]
@@ -25,6 +26,11 @@ def main() -> None:
     ap.add_argument("--scale", type=int, default=40, help="divide paper r by this")
     ap.add_argument("--trials", type=int, default=8)
     ap.add_argument("--m", type=int, default=10_000)
+    ap.add_argument("--backend", default="model",
+                    choices=["model", "thread", "process"],
+                    help="model = deterministic emulator (model seconds); "
+                         "thread/process = wall-clock execution, paced to the "
+                         "model schedule so straggler cells reproduce")
     args = ap.parse_args()
 
     print("=== Experiment 1 (Fig 8): 20% stragglers, scenarios 1-4 ===")
@@ -39,7 +45,8 @@ def main() -> None:
         for scheme in SCHEMES:
             em = ClusterEmulator(workers, time_scale=1.0,
                                  straggler=StragglerPolicy(prob=0.2), seed=s)
-            ts = [em.run_task(a, x, scheme, code="lt").t_complete
+            spec = TaskSpec(scheme=scheme, code="lt", backend=args.backend)
+            ts = [em.run_task(a, x, spec).t_complete
                   for _ in range(args.trials)]
             means[scheme] = np.mean(ts)
             line.append(f"{scheme}={means[scheme]:.3f}s")
@@ -58,7 +65,8 @@ def main() -> None:
         for scheme in SCHEMES:
             em = ClusterEmulator(workers, time_scale=1.0,
                                  straggler=StragglerPolicy(prob=prob), seed=5)
-            ts = [em.run_task(a, x, scheme, code="lt").t_complete
+            spec = TaskSpec(scheme=scheme, code="lt", backend=args.backend)
+            ts = [em.run_task(a, x, spec).t_complete
                   for _ in range(args.trials)]
             line.append(f"{scheme}={np.mean(ts):.3f}s")
         print("  " + "  ".join(line))

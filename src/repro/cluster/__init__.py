@@ -1,10 +1,12 @@
-"""Heterogeneous-cluster emulator — the paper's EC2/MPI experiments, locally.
+"""Heterogeneous-cluster executor — the paper's EC2/MPI experiments, locally.
 
-A thread-based master/worker executor that performs the *real* computation
-(numpy/JAX matvec on real data, real LT encode + peeling decode) while the
-*observed* completion behaviour follows injected per-worker shifted
+A master/worker executor that performs the *real* computation (numpy/JAX
+matvec on real data, real LT encode + peeling decode) behind a backend seam
+(DESIGN.md §15): the model-time thread emulator injects per-worker shifted
 exponential latency (paper Eq. 3 / Table 1) plus optional unexpected
-stragglers (paper §5.3.1: 3x observed delay with probability 0.2).
+stragglers (paper §5.3.1: 3x observed delay with probability 0.2) and is
+deterministic in the seed; the wall-clock process/thread backends run the
+same task algebra over real OS processes and report true wall seconds.
 """
 from repro.cluster.profiles import (  # noqa: F401
     EC2_PROFILES,
@@ -13,4 +15,12 @@ from repro.cluster.profiles import (  # noqa: F401
     paper_sim_scenario,
 )
 from repro.cluster.straggler import ChurnPolicy, StragglerPolicy  # noqa: F401
-from repro.cluster.executor import ClusterEmulator, TaskResult  # noqa: F401
+from repro.cluster.api import TaskResult, TaskSpec  # noqa: F401
+from repro.cluster.backend import (  # noqa: F401
+    BACKENDS,
+    ExecBackend,
+    ModelTimeBackend,
+    ProcessBackend,
+    get_backend,
+)
+from repro.cluster.executor import ClusterEmulator  # noqa: F401

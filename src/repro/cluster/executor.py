@@ -1,22 +1,21 @@
-"""Thread-based master/worker cluster emulator.
+"""Master/worker cluster executor behind a pluggable backend seam.
 
-Faithful to the paper's EC2/MPI implementation (§5.1) with the hardware
-swapped for injected latency:
+Faithful to the paper's EC2/MPI implementation (§5.1):
 
   * the master encodes A once (LT with peeling decode, eps = 0.13, exactly
     as the paper; or dense Gaussian with LS decode), pre-distributes the
     coded row blocks to workers, then broadcasts ``x``,
-  * each worker thread computes its batches **for real** (numpy matmul per
-    batch) and *returns* batch k at the model-scheduled observed time
+  * each worker computes its batches **for real** (numpy matmul per batch)
+    and returns batch k at / after the model-scheduled observed time
     ``k * b_i * rate_i`` (rate drawn once per task from the shifted
     exponential — or Weibull/Pareto — times the unexpected-straggler
     multiplier),
-  * the master consumes results from a queue and merges them in MODEL-TIME
-    order: it drew the realized rates itself, so the full batch-arrival
+  * the master consumes results from a queue behind a per-worker
+    WATERMARK: it drew the realized rates itself, so the full batch-arrival
     schedule is known a priori and the queue is consumed in exactly that
-    merged order (equivalent to a network delivering in timestamp order) —
-    the consumption order, and with it every reported field, is
-    deterministic in the seed, independent of thread scheduling jitter,
+    merged order — the consumption order, and with it every PAYLOAD field
+    (decoded result, masks, row counts), is deterministic in the seed,
+    independent of transport and scheduling jitter,
   * results feed an incremental ``StreamingDecoder`` (DESIGN.md §7) as they
     arrive, so decode work overlaps waiting; as soon as the accumulated rows
     reach the recovery threshold the master signals workers to stop (paper:
@@ -27,38 +26,44 @@ swapped for injected latency:
     ingest work, so paper-Fig.-8-style stacked timing stays reportable
     (terminal total ≈ residual + ingest).
 
-``streaming=False`` restores the one-shot terminal decode at the threshold
-(the pre-streaming behaviour; benchmarks A/B the two paths).
+WHERE the workers run — and which clock stamps the arrivals — is the
+backend seam (DESIGN.md §15, ``cluster/backend.py``): ``backend="model"``
+(default) is the thread emulator reporting deterministic MODEL seconds (the
+CI oracle); ``backend="process"`` runs workers as real OS processes over a
+real IPC queue and reports WALL seconds (true arrivals, scheduling jitter,
+pickling and queue cost included); ``backend="thread"`` is the wall-clock
+light tier.  Payload outputs are bit-identical across backends for the same
+seed (asserted in tests/test_executor_wallclock.py).
 
-Adaptive mode (DESIGN.md §8): ``run_task(..., adaptive=ReallocationPolicy(),
-churn=ChurnSchedule(...))`` runs the same master merge over the trajectory of
-``core.adaptive.simulate_adaptive`` — reallocation epochs evaluated on the
-deterministic model-time watermark (an epoch decision sees exactly the
-arrivals the watermark has passed), monotone top-ups drawn from a reserve of
-extra coded rows encoded up front.  With ``adaptive=None`` and ``churn=None``
-the task takes the original static path, bit-identical to before.
+The task surface is a typed :class:`TaskSpec` (``cluster/api.py``); the
+legacy kwargs call style still works through a shim that warns once.
+
+Adaptive mode (DESIGN.md §8): ``TaskSpec(adaptive=ReallocationPolicy(),
+churn=ChurnSchedule(...))`` runs the same master merge over the trajectory
+of ``core.adaptive.simulate_adaptive`` — reallocation epochs evaluated on
+the deterministic model-time watermark, monotone top-ups drawn from a
+reserve of extra coded rows encoded up front.  With both None the task
+takes the original static path, bit-identical to before.
 
 ``time_scale`` compresses emulated seconds into wall seconds so the full
-paper experiment grid runs in CI; all *reported* times are in model seconds.
+paper experiment grid runs in CI; model-backend *reported* times are in
+model seconds.
 """
 from __future__ import annotations
 
-import queue
-import threading
+import dataclasses
 import time
-from dataclasses import dataclass, field
+import warnings
+from contextlib import closing
 
 import numpy as np
 
+from repro.cluster.api import TaskResult, TaskSpec
+from repro.cluster.backend import ExecBackend, TaskPlan, get_backend
 from repro.cluster.profiles import WorkerProfile
 from repro.cluster.straggler import StragglerPolicy
-from repro.core.adaptive import (
-    ChurnSchedule,
-    ReallocationPolicy,
-    control_margin,
-    simulate_adaptive,
-)
-from repro.core.allocation import Allocation, allocate
+from repro.core.adaptive import control_margin, simulate_adaptive
+from repro.core.allocation import allocate
 from repro.core.decoding import StreamingDecoder, ls_decode_np, peel_decode_np
 from repro.core.encoding import (
     EncodePlan,
@@ -70,85 +75,43 @@ from repro.core.encoding import (
 from repro.core.simulator import batch_arrival_schedule
 from repro.utils.prng import derive
 
-__all__ = ["ClusterEmulator", "TaskResult"]
+__all__ = ["ClusterEmulator", "TaskResult", "TaskSpec"]
 
-_DONE = object()  # worker-finished sentinel pushed through the result queue
-
-
-@dataclass
-class TaskResult:
-    """Outcome of one distributed matvec."""
-
-    y: np.ndarray               # recovered result [r] (or [r, nrhs])
-    t_complete: float           # model-time of the last needed batch arrival
-    t_decode: float             # wall-clock residual decode seconds (real work)
-    rows_received: int          # coded rows consumed by the decoder
-    ok: bool                    # decode success
-    scheme: str
-    arrivals: list[tuple[float, int, int]] = field(default_factory=list)
-    # (model_time, worker, rows) per received batch — E[S(t)] curves (Fig 9)
-    t_decode_ingest: float = 0.0  # overlapped (pre-threshold) decode seconds
-    reallocations: list[dict] = field(default_factory=list)
-    # adaptive mode: one record per epoch that topped up (DESIGN.md §8)
-    rows_assigned: int = 0        # total coded rows assigned incl. top-ups
-
-    def rows_by_time(self, t_grid: np.ndarray) -> np.ndarray:
-        """S(t) on a grid, from the recorded arrival events."""
-        ts = np.array([a[0] for a in self.arrivals])
-        rows = np.array([a[2] for a in self.arrivals])
-        order = np.argsort(ts)
-        ts, rows = ts[order], np.cumsum(rows[order])
-        idx = np.searchsorted(ts, t_grid, side="right") - 1
-        out = np.where(idx >= 0, rows[np.clip(idx, 0, None)], 0)
-        return out.astype(np.float64)
+_LEGACY_KWARGS = (
+    "p", "code", "overhead", "alloc", "streaming", "adaptive", "churn",
+    "encode_mode",
+)
+_warned_legacy = False
 
 
-class _Worker(threading.Thread):
-    """One emulated worker: real batch matvecs, model-scheduled returns.
-
-    The worker executes an explicit event schedule (t_model, global_lo,
-    n_rows) — its slice of the master's precomputed batch-arrival algebra
-    (static: ``batch_arrival_schedule``; adaptive: ``simulate_adaptive``,
-    which folds in churn regime switches, deaths, joins and epoch top-ups).
-    Each batch is computed for real (numpy matmul on the coded rows) and
-    returned at its model-scheduled time.
-    """
-
-    def __init__(
-        self,
-        wid: int,
-        events: list[tuple[float, int, int]],  # (t_model, global_lo, n_rows)
-        a_hat: np.ndarray,
-        x: np.ndarray,
-        out: queue.Queue,
-        stop: threading.Event,
-        t0: float,
-        time_scale: float,
-    ):
-        super().__init__(daemon=True)
-        self.wid, self.events, self.a_hat, self.x = wid, events, a_hat, x
-        self.out, self.stop, self.t0, self.time_scale = out, stop, t0, time_scale
-
-    def run(self) -> None:
-        try:
-            for t_model, lo, n in self.events:
-                if self.stop.is_set():
-                    return
-                vals = self.a_hat[lo : lo + n] @ self.x   # the real compute
-                t_wall = self.t0 + t_model * self.time_scale
-                delay = t_wall - time.monotonic()
-                if delay > 0:
-                    if self.stop.wait(timeout=delay):     # interruptible sleep
-                        return
-                self.out.put((t_model, self.wid, lo, vals))
-        finally:
-            # always announce completion so the master's watermark can pass
-            # this worker, whatever exit path the thread took
-            self.out.put((np.inf, self.wid, -1, _DONE))
+def _coerce_spec(spec, kwargs) -> TaskSpec:
+    """Accept TaskSpec | scheme string (+ legacy kwargs, deprecated)."""
+    global _warned_legacy
+    if isinstance(spec, TaskSpec):
+        if kwargs:
+            raise TypeError(
+                f"run_task(TaskSpec, ...) takes no extra task kwargs; fold "
+                f"{sorted(kwargs)} into the TaskSpec"
+            )
+        return spec
+    if not isinstance(spec, str):
+        raise TypeError(f"expected a TaskSpec or scheme string, got {spec!r}")
+    unknown = set(kwargs) - set(_LEGACY_KWARGS)
+    if unknown:
+        raise TypeError(f"unknown run_task option(s): {sorted(unknown)}")
+    if kwargs and not _warned_legacy:
+        _warned_legacy = True
+        warnings.warn(
+            "run_task(scheme, p=..., code=..., ...) kwargs are deprecated; "
+            "pass a cluster.TaskSpec instead (this warns once)",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+    return TaskSpec(scheme=spec, **kwargs)
 
 
 class ClusterEmulator:
-    """Master + N emulated heterogeneous workers."""
+    """Master + N heterogeneous workers (emulated or wall-clock)."""
 
     def __init__(
         self,
@@ -158,8 +121,17 @@ class ClusterEmulator:
         straggler: StragglerPolicy | None = None,
         seed: int = 0,
     ):
+        # validated at the API boundary: zero/negative/non-finite scales
+        # used to silently produce schedules where every batch "arrives"
+        # at t<=0 (or never), defeating the whole event algebra
+        ts = float(time_scale)
+        if not np.isfinite(ts) or ts <= 0.0:
+            raise ValueError(
+                f"time_scale must be a finite positive number of wall "
+                f"seconds per model second, got {time_scale!r}"
+            )
         self.profiles = profiles
-        self.time_scale = time_scale
+        self.time_scale = ts
         self.straggler = straggler or StragglerPolicy(prob=0.0)
         self.seed = seed
         self._task_counter = 0
@@ -169,37 +141,25 @@ class ClusterEmulator:
         self,
         a: np.ndarray,
         x: np.ndarray,
-        scheme: str = "bpcc",
+        spec: TaskSpec | str = "bpcc",
         *,
-        p: int | np.ndarray | None = None,
-        code: str = "lt",
-        overhead: float = 0.13,
-        alloc: Allocation | None = None,
-        streaming: bool = True,
-        adaptive: ReallocationPolicy | None = None,
-        churn: ChurnSchedule | None = None,
-        encode_mode: str | None = None,
+        backend: str | ExecBackend | None = None,
+        **legacy_kwargs,
     ) -> TaskResult:
-        """Distributed y = A x under ``scheme`` ('uniform' | 'load_balanced' |
-        'hcmm' | 'bpcc').  ``streaming`` overlaps decode with arrivals via
-        ``StreamingDecoder``; False keeps the one-shot terminal decode.
+        """Distributed y = A x under ``spec`` (a :class:`TaskSpec`, or a
+        scheme string — legacy kwargs are accepted with a one-time
+        DeprecationWarning and forwarded into a TaskSpec).
 
-        ``churn`` injects mid-task disturbances (rate regime switches, worker
-        death, late join); ``adaptive`` enables epoch-boundary reallocation
-        from the online rate posterior (monotone top-up from a reserve of
-        extra coded rows — DESIGN.md §8).  Both None: the original static
-        path, bit-identical to previous behaviour.
+        ``backend`` overrides ``spec.backend`` for this call: 'model' (the
+        deterministic model-time oracle) | 'process' | 'thread' (wall-clock)
+        | an ``ExecBackend`` instance — same task algebra, same decode
+        trajectory, different transport and clock (DESIGN.md §15).
+        """
+        spec = _coerce_spec(spec, legacy_kwargs)
+        if backend is not None:
+            spec = dataclasses.replace(spec, backend=backend)
+        be = get_backend(spec.backend)
 
-        ``encode_mode`` routes the RESERVE rows' encode (the top-up pool,
-        rows beyond the static assignment) through the Pallas encode kernels
-        (``repro.kernels.ops.encode_rows``): 'interpret' | 'compile' | 'off'
-        as in kernels.ops, DESIGN.md §9 — mid-task top-ups sit on the
-        control loop's critical path, so unlike the offline pre-stored
-        encode they must not round-trip through the host.  'auto' picks the
-        encode implementation per (shape, backend) from the autotune
-        dispatch table with analytical-model fallback (DESIGN.md §11).
-        None (default) keeps the whole encode on the host path
-        (bit-identical to previous behaviour)."""
         r, m = a.shape
         if x.shape[0] != m:
             raise ValueError(f"x has {x.shape[0]} entries, A has {m} columns")
@@ -208,20 +168,22 @@ class ClusterEmulator:
 
         # accept WorkerProfile or bare service-time models
         models = [getattr(w, "model", w) for w in self.profiles]
+        alloc = spec.alloc
         if alloc is None:
-            kw = {"p": p} if scheme == "bpcc" else {}
+            kw = {"p": spec.p} if spec.scheme == "bpcc" else {}
             # the paper's tau* analysis assumes recovery once S(t) reaches
             # the required rows; LT peeling requires r(1+eps), so Algorithm 1
             # must size loads for that target — allocating for bare r leaves
             # total_rows below the decode threshold and the master degenerates
             # to a full drain (slowest-worker completion)
             r_alloc = r
-            if scheme in ("bpcc", "hcmm") and code == "lt":
-                r_alloc = required_rows(r, "lt", overhead)
-            alloc = allocate(scheme, r_alloc, models, **kw)
+            if spec.scheme in ("bpcc", "hcmm") and spec.code == "lt":
+                r_alloc = required_rows(r, "lt", spec.overhead)
+            alloc = allocate(spec.scheme, r_alloc, models, **kw)
 
-        need = required_rows(r, "lt" if code == "lt" else "gaussian", overhead) \
-            if alloc.coded else r
+        need = required_rows(
+            r, "lt" if spec.code == "lt" else "gaussian", spec.overhead
+        ) if alloc.coded else r
 
         # ---- realized rates: service-time draw x unexpected-straggler mult
         rates = np.array(
@@ -234,6 +196,7 @@ class ClusterEmulator:
 
         # ---- batch-arrival schedule: static merge, or the adaptive trace
         # (reallocation epochs on the model-time watermark, DESIGN.md §8)
+        adaptive, churn = spec.adaptive, spec.churn
         if adaptive is None and churn is None:
             schedule = batch_arrival_schedule(alloc, rates)
             capacity = int(alloc.total_rows)
@@ -243,7 +206,7 @@ class ClusterEmulator:
             if adaptive is not None and adaptive.enabled and alloc.coded:
                 reserve = int(np.ceil(adaptive.reserve_frac * alloc.total_rows))
             margin = (
-                control_margin(adaptive, code, overhead)
+                control_margin(adaptive, spec.code, spec.overhead)
                 if adaptive is not None else None
             )
             trace = simulate_adaptive(
@@ -262,7 +225,7 @@ class ClusterEmulator:
         if alloc.coded:
             plan = (
                 LTCode(r, seed=derive(self.seed, "code", task_id)).plan(capacity)
-                if code == "lt"
+                if spec.code == "lt"
                 else GaussianCode(r, seed=derive(self.seed, "code", task_id)).plan(
                     capacity
                 )
@@ -270,17 +233,15 @@ class ClusterEmulator:
             # interleave coded rows across workers: a contiguous split would
             # pool the systematic prefix on the first workers, skewing the
             # received-set distribution the peeling decoder sees
-            import numpy as _np
-
-            perm = _np.random.Generator(
-                _np.random.PCG64(derive(self.seed, "perm", task_id))
+            perm = np.random.Generator(
+                np.random.PCG64(derive(self.seed, "perm", task_id))
             ).permutation(plan.q)
             plan = EncodePlan(
                 indices=plan.indices[perm], coeffs=plan.coeffs[perm],
                 r=plan.r, q=plan.q, kind=plan.kind,
             )
             static_rows = int(alloc.total_rows)
-            if encode_mode is not None and capacity > static_rows:
+            if spec.encode_mode is not None and capacity > static_rows:
                 # the pre-distributed static assignment is encoded offline
                 # (host, as before); the reserve slice — what top-up epochs
                 # actually hand out — goes through the device encode kernel
@@ -288,7 +249,8 @@ class ClusterEmulator:
 
                 a_static = encode_matrix(a, plan.slice_rows(0, static_rows))
                 a_reserve = np.asarray(
-                    encode_rows(a, plan, static_rows, capacity, mode=encode_mode)
+                    encode_rows(a, plan, static_rows, capacity,
+                                mode=spec.encode_mode)
                 ).astype(a_static.dtype)
                 a_hat = np.concatenate([a_static, a_reserve], axis=0)
             else:
@@ -297,34 +259,35 @@ class ClusterEmulator:
             plan = None
             a_hat = a
 
-        out_q: queue.Queue = queue.Queue()
-        stop = threading.Event()
-        t0 = time.monotonic()
-        by_worker: dict[int, list[tuple[float, int, int]]] = {}
-        for t_ev, wid, lo, n in schedule:
-            by_worker.setdefault(wid, []).append((t_ev, lo, n))
-        threads = []
-        for i in range(len(models)):
-            threads.append(
-                _Worker(
-                    i, by_worker.get(i, []), a_hat, x,
-                    out_q, stop, t0, self.time_scale,
-                )
-            )
-        for t in threads:
-            t.start()
+        task_plan = TaskPlan(
+            a_hat=a_hat, x=x, schedule=schedule, n_workers=len(models),
+            time_scale=self.time_scale,
+        )
+        return self._drain(
+            task_plan, be,
+            r=r, plan=plan, coded=alloc.coded, need=need, capacity=capacity,
+            streaming=spec.streaming, scheme=spec.scheme,
+            reallocations=reallocations,
+        )
 
-        # ---- master: merge arrivals in model-time order, overlap decode,
-        # RETRY with more rows if the erasure pattern defeats the decoder
-        # (real systems keep draining the network rather than declaring
-        # failure at r(1+eps))
+    # -- master merge + decode loop (backend-agnostic) --------------------
+    def _drain(
+        self, task_plan: TaskPlan, be: ExecBackend, *,
+        r: int, plan: EncodePlan | None, coded: bool, need: int,
+        capacity: int, streaming: bool, scheme: str,
+        reallocations: list[dict],
+    ) -> TaskResult:
+        """Consume backend events in merged order, overlap decode, RETRY
+        with more rows if the erasure pattern defeats the decoder (real
+        systems keep draining the network rather than declaring failure at
+        r(1+eps))."""
+        x, schedule = task_plan.x, task_plan.schedule
         nrhs = 1 if x.ndim == 1 else x.shape[1]
         rows_arriving = int(sum(n for _t, _w, _lo, n in schedule))
         got_rows = np.zeros(capacity, dtype=bool)
         buf = np.zeros((capacity, nrhs), dtype=np.float64)
         arrivals: list[tuple[float, int, int]] = []
         rows_seen, t_complete = 0, np.inf
-        deadline = t0 + 600.0  # hard wall-clock guard
         # the r(1+eps) rule of thumb can exceed what the allocation encoded
         # (tight-redundancy grids); the drain target must stay reachable —
         # under churn only the rows that will actually arrive count
@@ -334,14 +297,14 @@ class ClusterEmulator:
         y, ok = np.zeros((r, nrhs)), False
         decoder = (
             StreamingDecoder.for_plan(plan, nrhs)
-            if (streaming and alloc.coded)
+            if (streaming and coded)
             else None
         )
 
         def _decode_terminal():
             """One-shot decode of everything received (streaming=False)."""
             td0 = time.perf_counter()
-            if not alloc.coded:
+            if not coded:
                 res = buf[:r], bool(got_rows[:r].all())
             else:
                 sel = np.flatnonzero(got_rows)
@@ -368,25 +331,18 @@ class ClusterEmulator:
             yy, okk, _ = decoder.finalize()
             return (yy, okk), time.perf_counter() - td0
 
-        # the master drew the rates (and, in adaptive mode, precomputed the
-        # reallocation trajectory), so every batch arrival (t_model, wid,
-        # row_lo, n_rows) is known a priori — consume the queue in exactly
-        # the merged ``schedule`` order (ties broken by (t, wid, lo)); late
-        # queue deliveries park in ``pending`` until their turn
-        done = False
-
         rows_at_last_attempt = -1
 
         def _process(ev) -> bool:
             """Consume one event in merged order; True when decode succeeded."""
             nonlocal rows_seen, t_complete, target, t_decode, t_ingest, y, ok
             nonlocal rows_at_last_attempt
-            t_model, wid, lo, vals = ev
+            t_rep, wid, lo, vals = ev
             vals2 = vals.reshape(len(vals), nrhs)
             buf[lo : lo + len(vals2)] = vals2
             got_rows[lo : lo + len(vals2)] = True
             rows_seen += len(vals2)
-            arrivals.append((t_model, wid, len(vals2)))
+            arrivals.append((t_rep, wid, len(vals2)))
             if decoder is not None:
                 ti0 = time.perf_counter()
                 decoder.ingest(np.arange(lo, lo + len(vals2)), vals2)
@@ -399,7 +355,11 @@ class ClusterEmulator:
                     return False
             elif rows_seen < target:
                 return False
-            t_complete = t_model
+            # arrival of the last needed batch: under the model backend the
+            # merge order IS time order, so the max equals the current event
+            # time (bit-identical to the pre-seam behaviour); wall backends
+            # can deliver out of order, so the max is the honest reading
+            t_complete = max(t[0] for t in arrivals)
             (yy, okk), dt_dec = _decode_current()
             t_decode += dt_dec
             y, ok = yy, okk
@@ -410,24 +370,16 @@ class ClusterEmulator:
                 )
             return ok
 
-        pending: dict[tuple[int, int], tuple[float, np.ndarray]] = {}
-        for t_sched, wid, lo, _n in schedule:
-            key = (wid, lo)
-            while key not in pending and time.monotonic() < deadline:
-                try:
-                    t_model, w_ev, lo_ev, vals = out_q.get(timeout=1.0)
-                except queue.Empty:
-                    if not any(t.is_alive() for t in threads) and out_q.empty():
-                        break  # defensive: a worker died without delivering
-                    continue
-                if vals is not _DONE:
-                    pending[(w_ev, lo_ev)] = (t_model, vals)
-            if key not in pending:
-                break  # deadline / dead worker: decode what we have
-            t_model, vals = pending.pop(key)
-            if _process((t_model, wid, lo, vals)):
-                done = True
-                break
+        done = False
+        tw0 = time.monotonic()
+        with closing(be.events(task_plan)) as events:
+            for ev in events:
+                if _process(ev):
+                    done = True
+                    break
+        # leaving the ``closing`` block stops workers deterministically, so
+        # t_wall covers compute + transport + teardown — the end-to-end cost
+        t_wall = time.monotonic() - tw0
 
         if not done and rows_seen and not ok and rows_seen != rows_at_last_attempt:
             # drained without ever attempting a decode at this received set
@@ -436,9 +388,6 @@ class ClusterEmulator:
             t_decode += dt_dec
             if arrivals:
                 t_complete = max(a_[0] for a_ in arrivals)
-        stop.set()
-        for t in threads:
-            t.join(timeout=5.0)
 
         y = y if x.ndim > 1 else y[:, 0]
         return TaskResult(
@@ -452,4 +401,7 @@ class ClusterEmulator:
             t_decode_ingest=float(t_ingest),
             reallocations=reallocations,
             rows_assigned=int(capacity),  # initial loads + any top-ups
+            backend=be.name,
+            t_wall=float(t_wall) if be.wall_clock else float("nan"),
+            rows_mask=got_rows.copy(),
         )

@@ -32,12 +32,14 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import lru_cache
+from typing import ClassVar
 
 import numpy as np
 
 from repro.core.allocation import Allocation, allocate
 from repro.core.distributions import ShiftedExp
 from repro.core.encoding import required_rows
+from repro.core.results import ResultMapping
 from repro.utils.prng import derive, rng as _rng, rng_scratch_iter as _rng_scratch_iter
 
 __all__ = [
@@ -58,9 +60,15 @@ __all__ = [
 ]
 
 
-@dataclass(frozen=True)
-class SimResult:
-    """Monte-Carlo summary for one (scheme, scenario) cell."""
+@dataclass(frozen=True, eq=False)
+class SimResult(ResultMapping):
+    """Monte-Carlo summary for one (scheme, scenario) cell.
+
+    Shares the unified result surface (``core.results.ResultMapping``,
+    DESIGN.md §15) with the executor's ``TaskResult``: dict-style access
+    works, and the stable spelling ``res["t_complete"]`` resolves to the
+    per-trial completion array whichever engine produced the result.
+    """
 
     scheme: str
     times: np.ndarray  # [n_trials] completion times
@@ -69,6 +77,16 @@ class SimResult:
     # decode-inclusive curves (None unless simulate_scheme got a decode_cost)
     times_decode_terminal: np.ndarray | None = None
     times_decode_pipelined: np.ndarray | None = None
+
+    LEGACY_ALIASES: ClassVar[dict[str, str]] = {
+        "t_complete": "times",  # the unified stable name (TaskResult parity)
+        "t_decode": "times_decode_terminal",
+        "t_decode_pipelined": "times_decode_pipelined",
+    }
+    PAYLOAD_FIELDS: ClassVar[tuple[str, ...]] = ("scheme", "required", "tau")
+    TIMING_FIELDS: ClassVar[tuple[str, ...]] = (
+        "times", "times_decode_terminal", "times_decode_pipelined",
+    )
 
     @property
     def mean(self) -> float:
@@ -464,8 +482,8 @@ def simulate_scheme(
 # --------------------------------------------------------------------------
 # Adaptive BPCC under drift and churn: static vs adaptive vs oracle
 # --------------------------------------------------------------------------
-@dataclass(frozen=True)
-class AdaptiveSimResult:
+@dataclass(frozen=True, eq=False)
+class AdaptiveSimResult(ResultMapping):
     """Monte-Carlo comparison of one scheme under mid-task churn.
 
     times_static   — completion with the t=0 allocation, never revisited
@@ -487,6 +505,16 @@ class AdaptiveSimResult:
     topup_rows: np.ndarray
     required: int
     tau: float
+
+    LEGACY_ALIASES: ClassVar[dict[str, str]] = {
+        "t_complete": "times_adaptive",  # the arm under test (stable name)
+    }
+    PAYLOAD_FIELDS: ClassVar[tuple[str, ...]] = (
+        "scheme", "topup_rows", "required", "tau",
+    )
+    TIMING_FIELDS: ClassVar[tuple[str, ...]] = (
+        "times_static", "times_adaptive", "times_oracle",
+    )
 
 
 def _oracle_allocation(scheme, r_alloc, workers, churn, p=None):

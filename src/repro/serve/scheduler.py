@@ -75,7 +75,7 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any
+from typing import Any, ClassVar
 
 import numpy as np
 
@@ -84,6 +84,7 @@ from repro.core.adaptive import (
     ParityController,
     TenantDeadlineParity,
 )
+from repro.core.results import ResultMapping
 from repro.serve.loadgen import ArrivalTrace
 
 __all__ = [
@@ -549,9 +550,14 @@ class ShardLatencyModel:
 # --------------------------------------------------------------------------
 # The model-time serving simulator
 # --------------------------------------------------------------------------
-@dataclass
-class ServeSimResult:
-    """One policy's full run over a trace (absolute model time)."""
+@dataclass(eq=False)
+class ServeSimResult(ResultMapping):
+    """One policy's full run over a trace (absolute model time).
+
+    Shares the unified result surface (``core.results.ResultMapping``,
+    DESIGN.md §15): ``res["t_complete"]`` / ``dict(res)`` work exactly as
+    they do on the executor's ``TaskResult`` and the MC ``SimResult``.
+    """
 
     policy: str
     t_complete: np.ndarray  # [R] inf where rejected
@@ -571,6 +577,14 @@ class ServeSimResult:
     class_attainment: np.ndarray = field(default=None)  # [C] per-class SLO
     class_max_wait: np.ndarray = field(default=None)  # [C] worst queue wait
     occupancy: float = 0.0  # mean decode tokens per step / n_slots
+
+    PAYLOAD_FIELDS: ClassVar[tuple[str, ...]] = (
+        "policy", "slo_met", "rejected", "step_tokens", "parity_levels",
+        "topups", "tenant",
+    )
+    TIMING_FIELDS: ClassVar[tuple[str, ...]] = (
+        "t_complete", "t_admit", "step_times", "makespan",
+    )
 
     def token_latency_percentile(self, q: float) -> float:
         """Percentile of per-token decode latency (each emitted token's

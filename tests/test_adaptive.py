@@ -333,7 +333,7 @@ def test_parity_controller_levels():
 def test_executor_disabled_policy_bit_identical():
     """run_task with a DISABLED policy routes through the adaptive engine
     yet reproduces the plain static path bit-for-bit."""
-    from repro.cluster import ClusterEmulator, ec2_scenario
+    from repro.cluster import ClusterEmulator, TaskSpec, ec2_scenario
 
     rng = np.random.default_rng(0)
     a = rng.standard_normal((400, 64)).astype(np.float32)
@@ -341,7 +341,7 @@ def test_executor_disabled_policy_bit_identical():
     _, workers = ec2_scenario(1)
     r0 = ClusterEmulator(workers, time_scale=0.3, seed=9).run_task(a, x, "bpcc")
     r1 = ClusterEmulator(workers, time_scale=0.3, seed=9).run_task(
-        a, x, "bpcc", adaptive=ReallocationPolicy(enabled=False)
+        a, x, TaskSpec(scheme="bpcc", adaptive=ReallocationPolicy(enabled=False))
     )
     assert r1.arrivals == r0.arrivals
     assert r1.t_complete == r0.t_complete
@@ -354,7 +354,7 @@ def test_executor_disabled_policy_bit_identical():
 def test_executor_adaptive_recovers_under_churn(code):
     """Mid-task death + slowdown: the adaptive executor still decodes the
     exact result, no later than the static run, logging its reallocations."""
-    from repro.cluster import ClusterEmulator, ec2_scenario
+    from repro.cluster import ClusterEmulator, TaskSpec, ec2_scenario
 
     rng = np.random.default_rng(0)
     a = rng.standard_normal((400, 64)).astype(np.float32)
@@ -367,10 +367,11 @@ def test_executor_adaptive_recovers_under_churn(code):
         ChurnEvent(t=0.2 * base.t_complete, worker=1, kind="rate", factor=5.0),
     ))
     r_static = ClusterEmulator(workers, time_scale=0.2, seed=9).run_task(
-        a, x, "bpcc", code=code, churn=churn
+        a, x, TaskSpec(scheme="bpcc", code=code, churn=churn)
     )
     r_adapt = ClusterEmulator(workers, time_scale=0.2, seed=9).run_task(
-        a, x, "bpcc", code=code, churn=churn, adaptive=ReallocationPolicy()
+        a, x, TaskSpec(scheme="bpcc", code=code, churn=churn,
+                       adaptive=ReallocationPolicy())
     )
     assert r_adapt.ok
     assert np.abs(r_adapt.y - ref).max() / np.abs(ref).max() < 2e-3
@@ -387,7 +388,7 @@ def test_executor_reserve_encoded_on_device(code):
     (DESIGN.md §9): the master recovers the exact product, and the arrivals
     / reallocation trajectory is identical to the host-encode run — only
     WHERE the reserve rows' floats were produced differs."""
-    from repro.cluster import ClusterEmulator, ec2_scenario
+    from repro.cluster import ClusterEmulator, TaskSpec, ec2_scenario
 
     rng = np.random.default_rng(0)
     a = rng.standard_normal((400, 64)).astype(np.float32)
@@ -399,11 +400,12 @@ def test_executor_reserve_encoded_on_device(code):
         ChurnEvent(t=0.008, worker=1, kind="rate", factor=5.0),
     ))
     r_host = ClusterEmulator(workers, time_scale=0.2, seed=9).run_task(
-        a, x, "bpcc", code=code, churn=churn, adaptive=ReallocationPolicy()
+        a, x, TaskSpec(scheme="bpcc", code=code, churn=churn,
+                       adaptive=ReallocationPolicy())
     )
     r_dev = ClusterEmulator(workers, time_scale=0.2, seed=9).run_task(
-        a, x, "bpcc", code=code, churn=churn, adaptive=ReallocationPolicy(),
-        encode_mode="off",
+        a, x, TaskSpec(scheme="bpcc", code=code, churn=churn,
+                       adaptive=ReallocationPolicy(), encode_mode="off")
     )
     assert r_dev.ok
     assert np.abs(r_dev.y - ref).max() / np.abs(ref).max() < 2e-3
@@ -416,7 +418,7 @@ def test_executor_reserve_encoded_on_device(code):
 def test_executor_churn_only_is_deterministic():
     """Same-seed churn runs (no adaptation) are bit-identical — the churn
     schedule rides the same model-time watermark as everything else."""
-    from repro.cluster import ClusterEmulator, ec2_scenario
+    from repro.cluster import ClusterEmulator, TaskSpec, ec2_scenario
 
     rng = np.random.default_rng(0)
     a = rng.standard_normal((300, 32)).astype(np.float32)
@@ -425,7 +427,7 @@ def test_executor_churn_only_is_deterministic():
     churn = ChurnSchedule((ChurnEvent(t=0.005, worker=2, kind="rate", factor=3.0),))
     runs = [
         ClusterEmulator(workers, time_scale=0.3, seed=4).run_task(
-            a, x, "bpcc", churn=churn
+            a, x, TaskSpec(scheme="bpcc", churn=churn)
         )
         for _ in range(2)
     ]

@@ -4,7 +4,7 @@ import pytest
 
 pytestmark = pytest.mark.slow  # wall-clock emulation: the CI slow job
 
-from repro.cluster import ClusterEmulator, StragglerPolicy, ec2_scenario
+from repro.cluster import ClusterEmulator, StragglerPolicy, TaskSpec, ec2_scenario
 from repro.core.distributions import estimate_parameters
 
 
@@ -22,7 +22,7 @@ def test_emulator_correct_result(small_task, scheme, code):
     a, x = small_task
     _, workers = ec2_scenario(1)
     em = ClusterEmulator(workers, time_scale=0.5, seed=1)
-    res = em.run_task(a, x, scheme, code=code)
+    res = em.run_task(a, x, TaskSpec(scheme=scheme, code=code))
     assert res.ok
     ref = a @ x
     # LT peeling is exact; Gaussian LS from a minimal received subset can be
@@ -79,7 +79,7 @@ def test_emulator_deterministic_across_runs(small_task, code):
     runs = []
     for _ in range(2):
         em = ClusterEmulator(workers, time_scale=0.3, seed=9)
-        runs.append(em.run_task(a, x, "bpcc", code=code))
+        runs.append(em.run_task(a, x, TaskSpec(scheme="bpcc", code=code)))
     r0, r1 = runs
     assert r0.arrivals == r1.arrivals
     assert r0.rows_received == r1.rows_received
@@ -100,10 +100,10 @@ def test_emulator_streaming_overlaps_decode(small_task, code):
     a, x = small_task
     _, workers = ec2_scenario(1)
     res_s = ClusterEmulator(workers, time_scale=0.5, seed=6).run_task(
-        a, x, "bpcc", code=code, streaming=True
+        a, x, TaskSpec(scheme="bpcc", code=code, streaming=True)
     )
     res_t = ClusterEmulator(workers, time_scale=0.5, seed=6).run_task(
-        a, x, "bpcc", code=code, streaming=False
+        a, x, TaskSpec(scheme="bpcc", code=code, streaming=False)
     )
     assert res_s.ok and res_t.ok
     assert res_s.arrivals == res_t.arrivals[: len(res_s.arrivals)]

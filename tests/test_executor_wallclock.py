@@ -1,0 +1,234 @@
+"""Backend seam: wall-clock executor vs the model-time oracle (DESIGN.md §15).
+
+The determinism contract under test: for a given seed, every PAYLOAD field
+(decoded ``y``, ``rows_received``, ``rows_mask``, ``ok``, ``rows_assigned``,
+arrival order) is BIT-identical across backends — the wall-clock backends
+deliver over a real queue but the master consumes behind the same watermark
+merge — while TIMING fields are backend-specific clocks (model seconds vs
+wall seconds) and are never compared bitwise.
+
+The fast tier covers the API surface (TaskSpec validation, time_scale
+boundary, the legacy-kwargs shim, the Mapping result shim); the wall-clock
+differential cells run threads/processes for real and are ``-m slow``.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.cluster import (
+    BACKENDS,
+    ClusterEmulator,
+    ProcessBackend,
+    TaskResult,
+    TaskSpec,
+    ec2_scenario,
+    get_backend,
+)
+from repro.core.adaptive import ChurnEvent, ChurnSchedule, ReallocationPolicy
+
+TS = 0.02  # model->wall compression: keeps each paced run ~1-2 s
+
+
+@pytest.fixture(scope="module")
+def small_task():
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((400, 64)).astype(np.float32)
+    x = rng.standard_normal(64).astype(np.float32)
+    return a, x
+
+
+@pytest.fixture(scope="module")
+def workers():
+    _, w = ec2_scenario(1)
+    return w
+
+
+def assert_payload_identical(res: TaskResult, oracle: TaskResult) -> None:
+    """Every field of the determinism contract, bit-for-bit."""
+    assert res.ok and oracle.ok
+    assert np.array_equal(res.y, oracle.y)
+    assert res.rows_received == oracle.rows_received
+    assert np.array_equal(res.rows_mask, oracle.rows_mask)
+    assert res.scheme == oracle.scheme
+    assert res.rows_assigned == oracle.rows_assigned
+    assert res.arrival_order() == oracle.arrival_order()
+    assert res.reallocations == oracle.reallocations
+
+
+# --------------------------------------------------------------------------
+# fast tier: API surface
+# --------------------------------------------------------------------------
+def test_taskspec_validates_at_construction():
+    with pytest.raises(ValueError, match="scheme"):
+        TaskSpec(scheme="zigzag")
+    with pytest.raises(ValueError, match="code"):
+        TaskSpec(code="reed_solomon")
+    with pytest.raises(ValueError, match="overhead"):
+        TaskSpec(overhead=-0.1)
+    with pytest.raises(ValueError, match="overhead"):
+        TaskSpec(overhead=float("nan"))
+    with pytest.raises(ValueError, match="p"):
+        TaskSpec(p=0)
+    with pytest.raises(ValueError, match="encode_mode"):
+        TaskSpec(encode_mode="turbo")
+    with pytest.raises(ValueError, match="backend"):
+        TaskSpec(backend="quantum")
+
+
+def test_taskspec_defaults_are_valid():
+    spec = TaskSpec()
+    assert spec.scheme == "bpcc" and spec.code == "lt"
+    assert spec.backend == "model" and spec.streaming
+
+
+def test_time_scale_validated_at_boundary(workers):
+    for bad in (0.0, -1.0, float("nan"), float("inf")):
+        with pytest.raises(ValueError, match="time_scale"):
+            ClusterEmulator(workers, time_scale=bad)
+
+
+def test_get_backend_registry():
+    assert set(BACKENDS) == {"model", "process", "thread"}
+    assert get_backend("model").name == "model"
+    be = ProcessBackend(pace=False, tier="thread")
+    assert get_backend(be) is be  # instances pass through
+    with pytest.raises(ValueError, match="unknown backend"):
+        get_backend("mpi")
+    with pytest.raises(ValueError, match="tier"):
+        ProcessBackend(tier="fiber")
+
+
+def test_taskspec_plus_kwargs_is_an_error(small_task, workers):
+    a, x = small_task
+    em = ClusterEmulator(workers, time_scale=TS, seed=1)
+    with pytest.raises(TypeError, match="fold"):
+        em.run_task(a, x, TaskSpec(), code="lt")
+
+
+def test_legacy_kwargs_warn_once_and_match(small_task, workers, monkeypatch):
+    """The deprecation shim: identical result, exactly one warning."""
+    import repro.cluster.executor as ex
+
+    a, x = small_task
+    monkeypatch.setattr(ex, "_warned_legacy", False)
+    ref = ClusterEmulator(workers, time_scale=TS, seed=5).run_task(
+        a, x, TaskSpec(scheme="bpcc", code="gaussian", p=4)
+    )
+    with pytest.warns(DeprecationWarning, match="TaskSpec"):
+        old = ClusterEmulator(workers, time_scale=TS, seed=5).run_task(
+            a, x, "bpcc", code="gaussian", p=4
+        )
+    assert_payload_identical(old, ref)
+    assert old.t_complete == ref.t_complete  # same backend: same clock
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # second use: silent
+        ClusterEmulator(workers, time_scale=TS, seed=5).run_task(
+            a, x, "bpcc", code="gaussian", p=4
+        )
+    with pytest.raises(TypeError, match="unknown run_task option"):
+        ClusterEmulator(workers, time_scale=TS, seed=5).run_task(
+            a, x, "bpcc", codec="lt"
+        )
+
+
+def test_result_mapping_shim(small_task, workers):
+    """TaskResult is a Mapping with legacy key aliases resolving (but not
+    enumerated), and a clean payload/timing split."""
+    a, x = small_task
+    res = ClusterEmulator(workers, time_scale=TS, seed=3).run_task(a, x)
+    assert res["T"] == res.t_complete == res["t_complete"]
+    assert res["decode_s"] == res.t_decode
+    assert res["ingest_s"] == res.t_decode_ingest
+    assert res["rows"] == res.rows_received
+    assert "T" not in res.keys() and "t_complete" in res.keys()
+    assert dict(res)["ok"] is res.ok
+    assert set(res.payload()) == set(TaskResult.PAYLOAD_FIELDS)
+    assert set(res.timings()) == set(TaskResult.TIMING_FIELDS)
+    assert res.backend == "model" and np.isnan(res.t_wall)
+    with pytest.raises(KeyError):
+        res["no_such_field"]
+
+
+def test_backend_argument_overrides_spec(small_task, workers):
+    a, x = small_task
+    res = ClusterEmulator(workers, time_scale=TS, seed=3).run_task(
+        a, x, TaskSpec(backend="model"), backend="thread"
+    )
+    assert res.backend == "thread" and np.isfinite(res.t_wall)
+
+
+# --------------------------------------------------------------------------
+# slow tier: differential cells (wall-clock execution for real)
+# --------------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.parametrize("tier", ["thread", "process"])
+@pytest.mark.parametrize("code", ["lt", "gaussian"])
+def test_static_payload_bit_identical(small_task, workers, tier, code):
+    """Static cells: same seed through model and wall-clock backends."""
+    a, x = small_task
+    oracle = ClusterEmulator(workers, time_scale=TS, seed=9).run_task(
+        a, x, TaskSpec(scheme="bpcc", code=code)
+    )
+    res = ClusterEmulator(workers, time_scale=TS, seed=9).run_task(
+        a, x, TaskSpec(scheme="bpcc", code=code, backend=tier)
+    )
+    assert_payload_identical(res, oracle)
+    assert res.backend == tier and oracle.backend == "model"
+    # timing fields: different clocks, never compared bitwise
+    assert np.isnan(oracle.t_wall)
+    assert np.isfinite(res.t_wall) and res.t_wall > 0
+    assert res.t_complete > 0
+    ref = a @ x
+    tol = 2e-3 if code == "gaussian" else 1e-4
+    assert np.abs(res.y - ref).max() / np.abs(ref).max() < tol
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("tier", ["thread", "process"])
+@pytest.mark.parametrize("code", ["lt", "gaussian"])
+def test_adaptive_payload_bit_identical(small_task, workers, tier, code):
+    """Adaptive cells: churn + reallocation ride the same watermark, so the
+    full trajectory (top-ups included) replays bit-identically on wall
+    clocks."""
+    a, x = small_task
+    churn = ChurnSchedule((
+        ChurnEvent(t=0.01, worker=0, kind="death"),
+        ChurnEvent(t=0.008, worker=1, kind="rate", factor=5.0),
+    ))
+    spec = TaskSpec(scheme="bpcc", code=code, churn=churn,
+                    adaptive=ReallocationPolicy())
+    oracle = ClusterEmulator(workers, time_scale=TS, seed=9).run_task(a, x, spec)
+    res = ClusterEmulator(workers, time_scale=TS, seed=9).run_task(
+        a, x, spec, backend=tier
+    )
+    assert_payload_identical(res, oracle)
+    assert len(res.reallocations) > 0  # the adaptive path really engaged
+
+
+@pytest.mark.slow
+def test_unpaced_process_backend_throughput_mode(small_task, workers):
+    """pace=False: workers stream as fast as they compute — payload still
+    bit-identical (the merge fixes consumption order), wall time well under
+    the paced schedule."""
+    a, x = small_task
+    oracle = ClusterEmulator(workers, time_scale=TS, seed=9).run_task(a, x)
+    res = ClusterEmulator(workers, time_scale=TS, seed=9).run_task(
+        a, x, TaskSpec(backend=ProcessBackend(pace=False))
+    )
+    assert_payload_identical(res, oracle)
+    assert np.isfinite(res.t_wall)
+
+
+@pytest.mark.slow
+def test_wallclock_run_is_repeatable(small_task, workers):
+    """Two wall-clock runs of the same seed agree on every payload field
+    even though their wall timings differ run to run."""
+    a, x = small_task
+    runs = [
+        ClusterEmulator(workers, time_scale=TS, seed=11).run_task(
+            a, x, TaskSpec(backend="thread")
+        )
+        for _ in range(2)
+    ]
+    assert_payload_identical(runs[0], runs[1])

@@ -30,6 +30,11 @@ in place), then diffs the fresh artifacts against the committed baselines:
                     engine in every (K, slots) cell, K=64 at least K=1
                     tokens/sec at every batch-full cell, and >= 4x fewer
                     host syncs per token at K=64 (DESIGN.md §14);
+      - executor:   wall-clock backends payload-bit-identical to the
+                    model-time oracle in every cell, paced wall completion
+                    inside a loose band around the scaled model schedule,
+                    BPCC not above HCMM (with quick-jitter headroom), and
+                    every unpaced throughput trial decoded OK;
   * upload: the fresh encode-kernel rows (``gaussian_encode``) are merged
     into the committed ``reports/bench/kernels.json`` so the new kernel's
     numbers ride along without hand-editing (other rows untouched);
@@ -46,7 +51,9 @@ in place), then diffs the fresh artifacts against the committed baselines:
     bench + its gate (the CI coded-training job); ``--serve-only`` runs
     just the quick serve bench + its gate (the CI serve-batch job);
     ``--engine-only`` runs just the quick engine bench + its check_engine
-    gate (the CI engine-fused job).
+    gate (the CI engine-fused job); ``--executor-only`` runs just the quick
+    executor bench + its check_executor gate (the CI executor-wallclock
+    job — real OS processes, so that job retries once on jitter).
 
 Exit code 0 = baselines healthy; 1 = a check failed (printed).
 """
@@ -64,9 +71,9 @@ sys.path.insert(0, os.path.join(REPO, "src"))
 from repro.kernels.cost import MODEL_ERROR_BOUND  # noqa: E402
 
 BASELINE_DIR = os.path.join(REPO, "reports", "bench")
-BLOCKS = "kernels,decode,streaming,adaptive,serve,engine,train"
+BLOCKS = "kernels,decode,streaming,adaptive,serve,engine,train,executor"
 FILES = ["kernels", "BENCH_decode", "BENCH_streaming", "BENCH_adaptive",
-         "BENCH_serve", "BENCH_engine", "BENCH_train"]
+         "BENCH_serve", "BENCH_engine", "BENCH_train", "BENCH_executor"]
 TRAIN_P99_SLOW = 10.0  # p99 gate applies at cells this violent or worse
 #                        (at the paper's 3x tier an onset step necessarily
 #                        costs ~2x a slow step, and onsets are p99-frequent,
@@ -249,6 +256,71 @@ def check_engine(fresh: list[dict]) -> None:
                  f"({ratio:.1f}x)")
 
 
+EXECUTOR_SCHEME_HEADROOM = 1.10  # quick mode: 2 paired seeds, wall jitter —
+#                                  BPCC may not beat HCMM by the full-run
+#                                  margin, but must never be 10% worse
+EXECUTOR_WALL_BAND = (0.95, 1.5)  # paced completion vs scaled model
+#                                   schedule: pacing guarantees >=, delivery
+#                                   cost bounds <= (plus a 1 s constant)
+
+
+def check_executor(fresh: list[dict]) -> None:
+    """The executor bench's acceptance relations (DESIGN.md §15), re-checked
+    on the fresh quick run:
+
+      * every identity cell (code x tier) proved the wall-clock backend's
+        payload bit-identical to the model-time oracle and decoded OK;
+      * straggler cells: payload identity held per trial, paced wall
+        completion sits in a loose sanity band around the scaled model
+        schedule (the READY handshake makes pacing exact to milliseconds;
+        the band only catches gross regressions), and BPCC mean wall
+        completion is not above HCMM's beyond quick-jitter headroom;
+      * throughput cells: every unpaced trial decoded OK and the
+        requests-per-second figure is a positive finite number."""
+    ident = [r for r in fresh if r.get("bench") == "executor_identity"]
+    strag = {r["scheme"]: r for r in fresh
+             if r.get("bench") == "executor_straggler"}
+    thru = [r for r in fresh if r.get("bench") == "executor_throughput"]
+    cells = {(r["code"], r["backend"]) for r in ident}
+    want = {(c, t) for c in ("lt", "gaussian") for t in ("thread", "process")}
+    if cells != want:
+        fail(f"executor: identity grid incomplete (have {sorted(cells)})")
+    for r in ident:
+        if not (r.get("payload_identical") and r.get("ok")):
+            fail(f"executor: {r['backend']} backend broke the determinism "
+                 f"contract at code={r['code']} (payload_identical="
+                 f"{r.get('payload_identical')}, ok={r.get('ok')})")
+    if set(strag) != {"bpcc", "hcmm"}:
+        fail(f"executor: straggler section missing a scheme arm "
+             f"(have {sorted(strag)})")
+    else:
+        for scheme, r in strag.items():
+            if not r.get("payload_identical"):
+                fail(f"executor: straggler cell {scheme} lost payload "
+                     f"identity on the process backend")
+            wall, sched = r["mean_T_wall"], r["mean_T_model_scaled"]
+            lo, hi = EXECUTOR_WALL_BAND
+            if not (lo * sched <= wall <= hi * sched + 1.0):
+                fail(f"executor: paced wall completion outside the sanity "
+                     f"band for {scheme} (wall={wall:.3f}s, scaled model="
+                     f"{sched:.3f}s)")
+        if strag["bpcc"]["mean_T_wall"] > \
+                strag["hcmm"]["mean_T_wall"] * EXECUTOR_SCHEME_HEADROOM:
+            fail(f"executor: BPCC wall completion above HCMM beyond "
+                 f"headroom ({strag['bpcc']['mean_T_wall']:.3f}s vs "
+                 f"{strag['hcmm']['mean_T_wall']:.3f}s)")
+    if not thru:
+        fail("executor: no throughput rows in the fresh run")
+    for r in thru:
+        if r.get("n_ok") != r.get("trials"):
+            fail(f"executor: {r['n_ok']}/{r['trials']} unpaced trials "
+                 f"decoded OK on the {r['backend']} backend")
+        rps = r.get("requests_per_sec", 0.0)
+        if not (rps > 0.0 and rps == rps and rps != float("inf")):
+            fail(f"executor: bogus requests_per_sec={rps!r} on the "
+                 f"{r['backend']} backend")
+
+
 def check_train(fresh: list[dict]) -> None:
     """The train bench's acceptance relations (ISSUE 7), re-checked on the
     fresh quick run — all scale-free, so quick mode only shrinks the step
@@ -401,6 +473,11 @@ def main() -> int:
                          "dir and its check_engine gate — fused/scalar bit "
                          "identity, K=64 tokens/sec >= K=1, >= 4x host-sync "
                          "reduction (the CI engine-fused job)")
+    ap.add_argument("--executor-only", action="store_true",
+                    help="run only the quick executor bench into the scratch "
+                         "dir and its check_executor gate — wall-clock/oracle "
+                         "payload bit identity, paced-schedule sanity band, "
+                         "BPCC<=HCMM ordering (the CI executor-wallclock job)")
     args = ap.parse_args()
     scratch = os.path.abspath(args.scratch)
     if os.path.realpath(scratch) == os.path.realpath(BASELINE_DIR):
@@ -483,6 +560,25 @@ def main() -> int:
             return 1
         print("\nengine baseline checks passed")
         return 0
+    if args.executor_only:
+        if not args.skip_run:
+            cmd = [sys.executable, "-m", "benchmarks.run", "--quick",
+                   "--only", "executor"]
+            print("+", " ".join(cmd), f"(BENCH_REPORT_DIR={scratch})")
+            proc = subprocess.run(cmd, cwd=REPO, env=env)
+            if proc.returncode != 0:
+                fail(f"quick executor bench exited {proc.returncode}")
+        baseline = load(BASELINE_DIR, "BENCH_executor")
+        fresh = load(scratch, "BENCH_executor")
+        if baseline is not None and fresh is not None:
+            check_schema("BENCH_executor", baseline, fresh)
+        if fresh is not None:
+            check_executor(fresh)
+        if _failures:
+            print(f"\n{len(_failures)} executor check(s) failed")
+            return 1
+        print("\nexecutor baseline checks passed")
+        return 0
     if not args.skip_run:
         cmd = [sys.executable, "-m", "benchmarks.run", "--quick", "--only", BLOCKS]
         print("+", " ".join(cmd), f"(BENCH_REPORT_DIR={scratch})")
@@ -509,6 +605,8 @@ def main() -> int:
         check_engine(fresh_by_name["BENCH_engine"])
     if fresh_by_name.get("BENCH_train"):
         check_train(fresh_by_name["BENCH_train"])
+    if fresh_by_name.get("BENCH_executor"):
+        check_executor(fresh_by_name["BENCH_executor"])
     if fresh_by_name.get("kernels"):
         check_kernels(fresh_by_name["kernels"])
         if not _failures:
